@@ -1,0 +1,58 @@
+"""Per-kernel microbenchmarks (jnp reference path timing + shapes).
+
+On this CPU container the Pallas kernels run in interpret mode, so the
+numbers here time the XLA reference path that the kernels replace on
+TPU; the kernel/ref allclose equivalence is asserted in tests/.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _t(fn, iters=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    from repro.kernels.hist.ref import hist_ref
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 256, 1 << 20,
+                                                      dtype=np.int32))
+    print(f"kernels/hist_1M,{_t(lambda: hist_ref(x, 256).block_until_ready()):.0f},bins=256")
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    q = jax.random.normal(jax.random.key(0), (1, 1024, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(1), (1, 1024, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (1, 1024, 2, 64), jnp.bfloat16)
+    print(f"kernels/attn_1k,{_t(lambda: flash_attention(q, k, v, use_kernel=False).block_until_ready()):.0f},B1_T1024_H8_GQA")
+
+    from repro.kernels.gmm.ref import gmm_ref
+    xe = jax.random.normal(jax.random.key(3), (8, 256, 256), jnp.bfloat16)
+    we = jax.random.normal(jax.random.key(4), (8, 256, 512), jnp.bfloat16)
+    print(f"kernels/gmm_8x256,{_t(lambda: gmm_ref(xe, we).block_until_ready()):.0f},E8_C256_D256_F512")
+
+    from repro.kernels.conv2d.ref import conv2d_ref
+    img = jax.random.normal(jax.random.key(5), (512, 512))
+    w = jax.random.normal(jax.random.key(6), (15, 15))
+    print(f"kernels/conv_512,{_t(lambda: conv2d_ref(img, w).block_until_ready()):.0f},15x15")
+
+    from repro.kernels.spmv.ref import spmv_ell_ref
+    vals = jax.random.normal(jax.random.key(7), (4096, 32))
+    idx = jax.random.randint(jax.random.key(8), (4096, 32), 0, 4096)
+    xv = jax.random.normal(jax.random.key(9), (4096,))
+    print(f"kernels/spmv_4k,{_t(lambda: spmv_ell_ref(vals, idx, xv).block_until_ready()):.0f},ELL_K32")
+
+    from repro.kernels.sort_bitonic.ref import sort_rows_ref
+    s = jax.random.normal(jax.random.key(10), (256, 1024))
+    print(f"kernels/sort_256x1k,{_t(lambda: sort_rows_ref(s).block_until_ready()):.0f},rows")
+
+
+if __name__ == "__main__":
+    run()

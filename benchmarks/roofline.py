@@ -1,0 +1,103 @@
+"""Roofline analysis: three terms per (arch x shape) on the single-pod
+mesh, from the compiled dry-run + layer-differencing probe + analytic
+model.  See EXPERIMENTS.md §Roofline for the semantics of each column.
+
+  compute    = FLOPs / (chips * 197e12)     [bf16 peak, v5e]
+  memory     = HBM bytes / (chips * 819e9)
+  collective = collective bytes / (chips * 50e9)
+
+FLOPs: analytic engineering model (launch.analytic), cross-checked with
+probe-corrected HLO FLOPs.  Bytes: analytic HBM traffic model (the HLO
+"bytes accessed" metric counts abstract operand traffic, not HBM).
+Collectives: probe-corrected HLO parsing (exact).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, shape_applicable
+from repro.launch import analytic
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+CHIPS = 256
+
+
+def load_jsonl(path: str) -> Dict:
+    out = {}
+    if not os.path.exists(path):
+        return out
+    for line in open(path):
+        r = json.loads(line)
+        out[(r["arch"], r["shape"], r.get("mesh", "16x16"))] = r
+    return out
+
+
+def roofline_row(arch_id: str, cell, probe: Dict, dry: Dict
+                 ) -> Optional[Dict]:
+    cfg = registry.get(arch_id)
+    ok, why = shape_applicable(cfg, cell)
+    if not ok:
+        return {"arch": arch_id, "shape": cell.name, "status": "SKIP",
+                "reason": why}
+    flops = analytic.hlo_flops(cfg, cell)
+    mflops = analytic.model_flops(cfg, cell)
+    hbm_b = analytic.hbm_bytes(cfg, cell)
+    pr = probe.get((arch_id, cell.name, "16x16"), {})
+    # probe numbers are per-device modules -> multiply by chips
+    hlo_flops_probe = pr.get("flops_total", 0) * CHIPS
+    coll = pr.get("coll_total", 0) * CHIPS
+    t_compute = flops / (CHIPS * PEAK)
+    t_memory = hbm_b / (CHIPS * HBM)
+    t_coll = coll / (CHIPS * ICI)
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    frac = t_compute / bound if bound > 0 else 0.0
+    return {
+        "arch": arch_id, "shape": cell.name, "status": "OK",
+        "flops": flops, "model_flops": mflops,
+        "hlo_flops_probe": hlo_flops_probe,
+        "hbm_bytes": hbm_b, "coll_bytes": coll,
+        "t_compute": t_compute, "t_memory": t_memory,
+        "t_collective": t_coll, "dominant": dominant,
+        "roofline_time": bound,
+        "compute_fraction": frac,
+        "model_over_hlo": (mflops / flops if flops else 0.0),
+        "coll_by_op": {k: v * CHIPS
+                       for k, v in pr.get("coll_by_op", {}).items()},
+    }
+
+
+def run(probe_path: str = "results/probe.jsonl",
+        dry_path: str = "results/dryrun_full.jsonl", csv: bool = True):
+    probe = load_jsonl(probe_path)
+    dry = load_jsonl(dry_path)
+    rows = []
+    for aid in registry.ARCH_IDS:
+        for cell in SHAPES:
+            r = roofline_row(aid, cell, probe, dry)
+            rows.append(r)
+            if csv:
+                if r["status"] == "SKIP":
+                    print(f"roofline/{r['arch']}/{r['shape']},0,SKIP")
+                else:
+                    print(
+                        f"roofline/{r['arch']}/{r['shape']},"
+                        f"{r['roofline_time'] * 1e6:.1f},"
+                        f"dom={r['dominant']}|"
+                        f"comp={r['t_compute'] * 1e3:.3f}ms|"
+                        f"mem={r['t_memory'] * 1e3:.3f}ms|"
+                        f"coll={r['t_collective'] * 1e3:.3f}ms|"
+                        f"frac={100 * r['compute_fraction']:.0f}%|"
+                        f"mf/hlo={r['model_over_hlo']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

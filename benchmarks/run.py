@@ -1,0 +1,37 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  table2/*   — Table 2 (13 workloads x 2 platforms, gain/idle/eff)
+  fig3/*     — Fig. 3 scaling over input sizes
+  fig4/*     — Fig. 4 Conv overlap timeline
+  fig5/*     — Fig. 5 LR task assignment
+  split_sweep/* — §5.4.3 work-split threshold sweep
+  kernels/*  — per-kernel microbenches
+  roofline/* — §Roofline terms per (arch x shape), from dry-run+probe
+"""
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import (fig3_scaling, fig4_overlap, fig5_tasks,
+                            kernels_bench, roofline, split_sweep,
+                            table2_hybrid)
+    print("# === Table 2: hybrid gain / idle (13 workloads) ===")
+    table2_hybrid.run()
+    print("# === Fig 3: scaling ===")
+    fig3_scaling.run()
+    print("# === Fig 4: Conv overlap ===")
+    fig4_overlap.run()
+    print("# === Fig 5: LR tasks ===")
+    fig5_tasks.run()
+    print("# === 5.4.3: split sweep ===")
+    split_sweep.run()
+    print("# === kernels ===")
+    kernels_bench.run()
+    print("# === roofline (40 cells) ===")
+    roofline.run()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,29 @@
+"""§5.4.3 reproduction: work-split threshold sweep for Conv — shows the
+analytic T_GPU/(T_GPU+T_CPU) split is (near) optimal, like the paper's
+empirical refinement."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import work_sharing
+
+
+def run(ratio: float = 3.9, total_units: int = 768):
+    thr = [1.0, 1.0 / ratio]
+    best = None
+    print("split_sweep/host_share,hybrid_time_model,note")
+    for share in np.linspace(0.0, 0.5, 26):
+        k_host = int(total_units * share)
+        units = [total_units - k_host, k_host]
+        times = [u / t for u, t in zip(units, thr)]
+        hybrid = max(times)
+        if best is None or hybrid < best[1]:
+            best = (share, hybrid)
+        print(f"split_sweep/{share:.2f},{hybrid:.1f},")
+    analytic = work_sharing.paper_split(1.0, ratio)
+    print(f"split_sweep/best,{best[1]:.1f},"
+          f"best_share={best[0]:.2f}|paper_rule={analytic:.2f}")
+
+
+if __name__ == "__main__":
+    run()

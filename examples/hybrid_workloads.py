@@ -1,0 +1,40 @@
+"""Run the paper's 13 workloads hybrid vs single-device (Table 2 style).
+
+    PYTHONPATH=src python examples/hybrid_workloads.py [--ratio 3.9]
+"""
+import argparse
+import importlib
+
+from repro.core.hybrid_executor import HybridExecutor
+from repro.core.metrics import summarize
+from repro.workloads import ALL_WORKLOADS
+
+QUICK = dict(sort=dict(n=1 << 16), hist=dict(n=1 << 20), spmv=dict(n=2048),
+             spgemm=dict(n=512), raycast=dict(n_rays=1 << 15, d=32),
+             bilateral=dict(size=192), conv=dict(size=512, ksize=9),
+             montecarlo=dict(n_photons=1 << 16, unit=1 << 12),
+             listrank=dict(n=1 << 17), concomp=dict(n=1 << 13),
+             lbm=dict(d=32, n_steps=3), dither=dict(h=96, w=96),
+             bundle=dict(n_cams=4, n_pts=128))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ratio", type=float, default=3.9,
+                    help="simulated accel:host throughput ratio")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    results = []
+    for name in ALL_WORKLOADS:
+        if args.only and name != args.only:
+            continue
+        mod = importlib.import_module(f"repro.workloads.{name}")
+        ex = HybridExecutor(simulated_ratio=args.ratio)
+        out = mod.run_hybrid(ex, **QUICK.get(name, {}))
+        results.append(out.result)
+        print(out.result.row(), flush=True)
+    print("\n" + summarize(results))
+
+
+if __name__ == "__main__":
+    main()

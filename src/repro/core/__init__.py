@@ -1,0 +1,17 @@
+"""Core hybrid-computing engine (the paper's contribution, generalized).
+
+- work_sharing:   throughput-proportional work splits (paper §5.4.3)
+- task_graph:     HEFT task-parallel scheduling (paper §5.4.4)
+- calibration:    static + EWMA online throughput estimation (paper §4.5)
+- hybrid_executor: executes work-shared plans over JAX device groups
+- host_offload:   LUT/PRNG/pipeline host tasks (paper §4.6-§4.8)
+- metrics:        gain & idle-time accounting (paper §5.1)
+"""
+from repro.core.work_sharing import (WorkPlan, integer_shares, paper_split,
+                                     plan_work, proportional_shares,
+                                     refine_split)
+from repro.core.task_graph import Schedule, Task, TaskGraph
+from repro.core.calibration import ThroughputTracker
+from repro.core.hybrid_executor import (DeviceGroup, HybridExecutor,
+                                        WorkSharedOutput, detect_platform)
+from repro.core.metrics import HybridResult, summarize

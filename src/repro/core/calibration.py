@@ -1,0 +1,120 @@
+"""Throughput calibration: static (roofline) and online (EWMA telemetry).
+
+The paper obtains work shares "empirically by studying the time taken by
+the CPU and the GPU individually" (§4.5).  At cluster scale that
+measurement must be continuous: per-group step times feed an EWMA which
+re-plans shares when drift exceeds a threshold — this is the straggler
+mitigation path used by train.trainer.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+
+@dataclass
+class GroupStats:
+    ewma_unit_time: float = 0.0      # seconds per work unit
+    n_obs: int = 0
+    last_time: float = 0.0
+    alive: bool = True
+
+
+class ThroughputTracker:
+    """EWMA throughput per device group + drift detection."""
+
+    def __init__(self, groups: Sequence[str], alpha: float = 0.25,
+                 drift_threshold: float = 0.15):
+        self.alpha = alpha
+        self.drift_threshold = drift_threshold
+        self.stats: Dict[str, GroupStats] = {g: GroupStats() for g in groups}
+        self._planned_thr: Optional[List[float]] = None
+
+    def reset(self) -> None:
+        """Forget calibration history (e.g. between workload phases with
+        different per-unit cost profiles)."""
+        for g in self.stats:
+            alive = self.stats[g].alive
+            self.stats[g] = GroupStats(alive=alive)
+        self._planned_thr = None
+
+    def update(self, group: str, units: int, elapsed: float) -> None:
+        s = self.stats[group]
+        if units <= 0:
+            return
+        per_unit = elapsed / units
+        if s.n_obs == 0:
+            s.ewma_unit_time = per_unit
+        else:
+            s.ewma_unit_time = (self.alpha * per_unit
+                                + (1 - self.alpha) * s.ewma_unit_time)
+        s.n_obs += 1
+        s.last_time = elapsed
+
+    def mark_dead(self, group: str) -> None:
+        self.stats[group].alive = False
+
+    def mark_alive(self, group: str) -> None:
+        self.stats[group].alive = True
+
+    def throughputs(self, groups: Optional[Sequence[str]] = None
+                    ) -> List[float]:
+        gs = groups or list(self.stats)
+        out = []
+        for g in gs:
+            s = self.stats[g]
+            if not s.alive:
+                out.append(0.0)
+            elif s.n_obs == 0 or s.ewma_unit_time <= 0:
+                out.append(1.0)  # uncalibrated: assume unit throughput
+            else:
+                out.append(1.0 / s.ewma_unit_time)
+        return out
+
+    def should_replan(self) -> bool:
+        """True when current EWMA deviates from the throughputs used for
+        the last plan by more than the drift threshold (stragglers!)."""
+        cur = self.throughputs()
+        if self._planned_thr is None:
+            self._planned_thr = cur
+            return True
+        for a, b in zip(cur, self._planned_thr):
+            if b == 0 and a > 0:
+                return True
+            if b > 0 and abs(a - b) / b > self.drift_threshold:
+                return True
+        return False
+
+    def mark_planned(self) -> None:
+        self._planned_thr = self.throughputs()
+
+
+def measure(fn: Callable[[], object], warmup: int = 1, iters: int = 3
+            ) -> float:
+    """Wall-clock a blocking callable (used by workload calibration)."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+# ---------------------------------------------------------------------------
+# Static estimates from hardware constants (used before any measurement,
+# and by the roofline analysis; TPU v5e per chip)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/sec
+ICI_BW = 50e9                     # bytes/sec/link
+
+
+def static_time_estimate(flops: float, bytes_hbm: float,
+                         bytes_collective: float = 0.0, chips: int = 1
+                         ) -> float:
+    """Roofline-style lower-bound execution time estimate (seconds)."""
+    return max(flops / (chips * PEAK_FLOPS_BF16),
+               bytes_hbm / (chips * HBM_BW),
+               bytes_collective / (chips * ICI_BW))

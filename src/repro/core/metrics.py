@@ -1,0 +1,60 @@
+"""The paper's §5.1 evaluation metrics: gain and idle time.
+
+gain       = (best single-device time - hybrid time) / best single time
+idle_i     = fraction of the hybrid makespan device i spent not computing
+efficiency = 1 - mean(idle)          (paper reports ~90% on average)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+
+@dataclass(frozen=True)
+class HybridResult:
+    workload: str
+    hybrid_time: float
+    single_times: Dict[str, float]   # device-group name -> alone time
+    busy_times: Dict[str, float]     # device-group name -> busy during hybrid
+
+    @property
+    def best_single(self) -> float:
+        return min(self.single_times.values())
+
+    @property
+    def best_single_device(self) -> str:
+        return min(self.single_times, key=self.single_times.get)
+
+    @property
+    def gain(self) -> float:
+        return (self.best_single - self.hybrid_time) / self.best_single
+
+    @property
+    def idle_fracs(self) -> Dict[str, float]:
+        return {d: max(0.0, (self.hybrid_time - b) / self.hybrid_time)
+                for d, b in self.busy_times.items()}
+
+    @property
+    def resource_efficiency(self) -> float:
+        idle = self.idle_fracs
+        return 1.0 - sum(idle.values()) / len(idle) if idle else 1.0
+
+    def row(self) -> str:
+        idle = self.idle_fracs
+        worst = max(idle.values()) if idle else 0.0
+        return (f"{self.workload:8s} gain={100 * self.gain:6.1f}%  "
+                f"idle={100 * worst:5.1f}%  "
+                f"eff={100 * self.resource_efficiency:5.1f}%  "
+                f"hybrid={self.hybrid_time * 1e3:9.3f}ms  "
+                f"best-single[{self.best_single_device}]="
+                f"{self.best_single * 1e3:9.3f}ms")
+
+
+def summarize(results: Sequence[HybridResult]) -> str:
+    lines = [r.row() for r in results]
+    if results:
+        avg_gain = sum(r.gain for r in results) / len(results)
+        avg_eff = sum(r.resource_efficiency for r in results) / len(results)
+        lines.append(f"{'MEAN':8s} gain={100 * avg_gain:6.1f}%  "
+                     f"eff={100 * avg_eff:5.1f}%")
+    return "\n".join(lines)

@@ -1,0 +1,47 @@
+"""Failure detection & injection.
+
+Real deployments detect dead slices via missed heartbeats; tests and the
+examples inject failures deterministically.  The trainer reacts the same
+way to both: mark the group dead, re-plan work shares (elastic), restore
+from the last checkpoint if the failed group held non-replicated state.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+
+class HeartbeatMonitor:
+    """Tracks per-group heartbeats; a group is dead after ``timeout_s``."""
+
+    def __init__(self, groups, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout_s
+        self.clock = clock
+        self.last: Dict[str, float] = {g: clock() for g in groups}
+        self.dead: Set[str] = set()
+
+    def beat(self, group: str) -> None:
+        self.last[group] = self.clock()
+        self.dead.discard(group)
+
+    def check(self) -> Set[str]:
+        now = self.clock()
+        for g, t in self.last.items():
+            if now - t > self.timeout:
+                self.dead.add(g)
+        return set(self.dead)
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic failure schedule for tests/examples.
+
+    kill[step] = group to kill at that step; revive[step] = group to
+    bring back (elastic join)."""
+    kill: Dict[int, str] = field(default_factory=dict)
+    revive: Dict[int, str] = field(default_factory=dict)
+
+    def at_step(self, step: int):
+        return self.kill.get(step), self.revive.get(step)

@@ -1,0 +1,29 @@
+"""Bilateral filter: host-LUT task + device kernel (paper §4.6 end-to-end)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.host_offload import bilateral_luts
+from repro.kernels.bilateral.bilateral import bilateral_pallas
+from repro.kernels.bilateral.ref import bilateral_ref
+from repro.kernels.common import default_interpret
+
+
+def bilateral(img, sigma_s: float, sigma_r: float, radius: int,
+              *, use_kernel: bool = True, row_tile: int = 64):
+    """Full hybrid pipeline: LUTs precomputed on host (task parallelism),
+    filtering on the accelerator (work shared upstream)."""
+    if not use_kernel:
+        return bilateral_ref(img, sigma_s, sigma_r, radius)
+    sp, rl = bilateral_luts(sigma_s, sigma_r, radius)     # host task
+    return _bilat_jit(img, jnp.asarray(sp), jnp.asarray(rl),
+                      row_tile=row_tile)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def _bilat_jit(img, sp, rl, *, row_tile: int):
+    return bilateral_pallas(img, sp, rl, row_tile=row_tile,
+                            interpret=default_interpret())

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the bilateral filter (direct, no LUT)."""
+import jax.numpy as jnp
+
+
+def bilateral_ref(img: jnp.ndarray, sigma_s: float, sigma_r: float,
+                  radius: int) -> jnp.ndarray:
+    """Direct evaluation with edge padding; quantized range difference to
+    match the kernel's integer LUT indexing."""
+    H, W = img.shape
+    K = 2 * radius + 1
+    padded = jnp.pad(img, radius, mode="edge")
+    num = jnp.zeros((H, W), jnp.float32)
+    den = jnp.zeros((H, W), jnp.float32)
+    for di in range(K):
+        for dj in range(K):
+            nb = padded[di:di + H, dj:dj + W]
+            d2 = (di - radius) ** 2 + (dj - radius) ** 2
+            sw = jnp.exp(-d2 / (2 * sigma_s ** 2))
+            diff = jnp.clip(jnp.abs(nb - img).astype(jnp.int32), 0, 255)
+            rw = jnp.exp(-(diff.astype(jnp.float32) ** 2)
+                         / (2 * sigma_r ** 2))
+            w = sw * rw
+            num += w * nb
+            den += w
+    return (num / jnp.maximum(den, 1e-12)).astype(img.dtype)

@@ -1,0 +1,10 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: True off-TPU (this container is CPU-only;
+    TPU is the *target*, interpret=True validates kernel semantics)."""
+    return jax.default_backend() != "tpu"

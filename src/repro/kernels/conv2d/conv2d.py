@@ -1,0 +1,54 @@
+"""Tiled 2-D convolution Pallas kernel (paper §4.6 Conv, TPU adaptation).
+
+Each grid step computes one output row-tile.  Because halo rows overlap
+across tiles, the padded image stays resident in VMEM and each step
+slices its (row_tile + K - 1)-row window with ``pl.ds`` — the K x K
+filter sweep is a shifted multiply-add on the VPU, the TPU-native
+replacement for CUDA's thread-per-pixel loop.
+
+VMEM: padded image + (TR, W) out tile; documented limit ~2k x 2k f32
+images per core (16 MiB v5e VMEM) — shard larger images across cores
+(that outer work-sharing is workloads/conv.py's job).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(img_ref, w_ref, o_ref, *, K: int, row_tile: int):
+    i = pl.program_id(0)
+    img = img_ref[pl.ds(i * row_tile, row_tile + K - 1), :]
+    w = w_ref[...]                           # (K, K)
+    W_out = o_ref.shape[1]
+    acc = jnp.zeros((row_tile, W_out), jnp.float32)
+    for di in range(K):
+        for dj in range(K):
+            acc += w[di, dj] * img[di:di + row_tile, dj:dj + W_out]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def conv2d_pallas(img: jnp.ndarray, w: jnp.ndarray, *, row_tile: int = 64,
+                  interpret: bool = True) -> jnp.ndarray:
+    """'same' 2-D correlation. img: (H, W) f32; w: (K, K), odd K."""
+    H, W = img.shape
+    K = w.shape[0]
+    r = K // 2
+    pad_h = (-H) % row_tile
+    padded = jnp.pad(img, ((r, r + pad_h), (r, r)))
+    grid = ((H + pad_h) // row_tile,)
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, K=K, row_tile=row_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(padded.shape, lambda i: (0, 0)),  # whole image
+            pl.BlockSpec((K, K), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H + pad_h, W), img.dtype),
+        interpret=interpret,
+    )(padded, w)
+    return out[:H]

@@ -1,0 +1,18 @@
+"""Jitted public wrapper for conv2d."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import default_interpret
+from repro.kernels.conv2d.conv2d import conv2d_pallas
+from repro.kernels.conv2d.ref import conv2d_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "row_tile"))
+def conv2d(img, w, *, use_kernel: bool = True, row_tile: int = 64):
+    if use_kernel:
+        return conv2d_pallas(img, w, row_tile=row_tile,
+                             interpret=default_interpret())
+    return conv2d_ref(img, w)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for conv2d ('same' correlation)."""
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(img: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    out = jax.lax.conv_general_dilated(
+        img[None, None].astype(jnp.float32),
+        w[None, None].astype(jnp.float32),
+        window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return out[0, 0].astype(img.dtype)

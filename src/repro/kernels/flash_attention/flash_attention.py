@@ -1,0 +1,90 @@
+"""Blocked (flash) causal attention Pallas kernel.
+
+The LM hot-spot (beyond-paper: the paper has no attention workload, but
+its compute-bound image kernels map to exactly this tiling discipline on
+TPU).  Online-softmax over K/V blocks; grid = (batch*heads, Q blocks,
+KV blocks) with the KV dimension innermost (sequential on TPU), running
+max / sum / accumulator kept in VMEM scratch.
+
+VMEM: q (TQ, d) + k/v (TK, d) + acc (TQ, d) f32 + scores (TQ, TK).
+TQ=TK=512, d=128 -> ~2.6 MiB; MXU-aligned (multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, block_q: int,
+                  block_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale       # (TQ, d)
+    k = k_ref[0].astype(jnp.float32)               # (TK, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = q @ k.T                                    # (TQ, TK)
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+    m_prev = m_scr[...]                            # (TQ, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, -1, keepdims=True)
+    acc_scr[...] = alpha * acc_scr[...] + p @ v
+    m_scr[...] = m_cur
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = True):
+    """q: (BH, T, d); k/v: (BH, S, d). Returns (BH, T, d)."""
+    BH, T, d = q.shape
+    S = k.shape[1]
+    block_q = min(block_q, T)
+    block_k = min(block_k, S)
+    assert T % block_q == 0 and S % block_k == 0, (T, S, block_q, block_k)
+    scale = d ** -0.5
+    grid = (BH, T // block_q, S // block_k)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, d), q.dtype),
+        scratch_shapes=[
+            # (TQ, 1) running max / sum, (TQ, d) accumulator — VMEM
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,38 @@
+"""Jitted public wrapper for flash attention (GQA-aware)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "use_kernel", "block_q",
+                                    "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, use_kernel: bool = True,
+                    block_q: int = 512, block_k: int = 512):
+    """q: (B, T, H, d); k/v: (B, S, Kv, d) with H % Kv == 0.
+
+    Returns (B, T, H, d)."""
+    B, T, H, d = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    rep = H // Kv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    if use_kernel:
+        of = flash_attention_pallas(qf, kf, vf, causal=causal,
+                                    block_q=block_q, block_k=block_k,
+                                    interpret=default_interpret())
+    else:
+        of = attention_ref(qf, kf, vf, causal=causal)
+    return of.reshape(B, H, T, d).transpose(0, 2, 1, 3)

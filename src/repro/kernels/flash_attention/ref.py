@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for flash attention."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: (BH, T, d); k/v: (BH, S, d)."""
+    d = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    if causal:
+        T, S = s.shape[1], s.shape[2]
+        mask = jnp.arange(S)[None, :] <= jnp.arange(T)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the grouped matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import default_interpret
+from repro.kernels.gmm.gmm import gmm_pallas
+from repro.kernels.gmm.ref import gmm_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_kernel", "tile_c", "tile_f",
+                                    "tile_d"))
+def gmm(x, w, *, use_kernel: bool = True, tile_c: int = 128,
+        tile_f: int = 128, tile_d: int = 128):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    if use_kernel:
+        return gmm_pallas(x, w, tile_c=tile_c, tile_f=tile_f, tile_d=tile_d,
+                          interpret=default_interpret())
+    return gmm_ref(x, w)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the grouped matmul."""
+import jax.numpy as jnp
+
+
+def gmm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("ecd,edf->ecf", x, w)

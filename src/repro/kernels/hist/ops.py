@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the histogram kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.hist.hist import hist_pallas
+from repro.kernels.hist.ref import hist_ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "use_kernel", "tile"))
+def histogram(x: jnp.ndarray, n_bins: int, *, use_kernel: bool = True,
+              tile: int = 2048) -> jnp.ndarray:
+    """Histogram of int values in [0, n_bins)."""
+    if use_kernel:
+        return hist_pallas(x.reshape(-1), n_bins, tile=tile,
+                           interpret=default_interpret())
+    return hist_ref(x.reshape(-1), n_bins)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the histogram kernel."""
+import jax.numpy as jnp
+
+
+def hist_ref(x: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    return jnp.bincount(x.astype(jnp.int32), length=n_bins).astype(jnp.int32)

@@ -1,0 +1,18 @@
+"""Jitted public wrapper for the bitonic row sorter."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import default_interpret
+from repro.kernels.sort_bitonic.ref import sort_rows_ref
+from repro.kernels.sort_bitonic.sort_bitonic import sort_rows_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "row_tile"))
+def sort_rows(x, *, use_kernel: bool = True, row_tile: int = 256):
+    if use_kernel:
+        return sort_rows_pallas(x, row_tile=row_tile,
+                                interpret=default_interpret())
+    return sort_rows_ref(x)

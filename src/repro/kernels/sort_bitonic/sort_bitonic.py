@@ -1,0 +1,61 @@
+"""In-VMEM bitonic sorter Pallas kernel (paper §4.1 sort, TPU adaptation).
+
+The CUDA sample-sort leaf sorts 32-element bins with warp-synchronous
+quicksort.  Warps don't exist on TPU; the VREG-native equivalent is a
+data-parallel bitonic network over the 128-wide lanes: each grid step
+sorts a tile of rows entirely in VMEM with log^2(L) vectorized
+compare-exchange sweeps (jnp.where on XOR-partner lanes).
+
+Used as the leaf sorter of the hybrid sample sort in workloads/sort.py.
+VMEM: (TR, L) f32 + index helpers; TR=256, L<=1024 -> ~1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitonic_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Sort each row ascending; L = power of two (static unrolled net)."""
+    TR, L = x.shape
+    idx = jnp.arange(L)
+    k = 2
+    while k <= L:
+        j = k // 2
+        while j >= 1:
+            partner = idx ^ j
+            px = jnp.take(x, partner, axis=1)
+            is_lo = idx < partner
+            ascending = (idx & k) == 0
+            keep_min = jnp.where(ascending, is_lo, ~is_lo)[None, :]
+            x = jnp.where(keep_min, jnp.minimum(x, px), jnp.maximum(x, px))
+            j //= 2
+        k *= 2
+    return x
+
+
+def _sort_kernel(x_ref, o_ref):
+    o_ref[...] = _bitonic_rows(x_ref[...])
+
+
+def sort_rows_pallas(x: jnp.ndarray, *, row_tile: int = 256,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Sort each row of (G, L) ascending; L must be a power of two."""
+    G, L = x.shape
+    assert (L & (L - 1)) == 0, f"L={L} must be a power of two"
+    pad = (-G) % row_tile
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (x.shape[0] // row_tile,)
+    out = pl.pallas_call(
+        _sort_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_tile, L), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_tile, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+    return out[:G]

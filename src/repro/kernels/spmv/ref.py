@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for spmv (ELL and COO forms)."""
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(vals: jnp.ndarray, idx: jnp.ndarray, x: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """vals/idx: (R, K) ELL with zero-padded vals. Returns (R,)."""
+    return jnp.sum(vals * x[idx], axis=1)
+
+
+def spmv_coo_ref(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+                 x: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """COO spmv via segment-sum."""
+    import jax
+    return jax.ops.segment_sum(vals * x[cols], rows, num_segments=n_rows)
+
+
+def spmv_dense_ref(A: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    return A @ x

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the
+# device count at first backend initialization.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build the jitted ``train_step`` (train shapes) or
+``serve_step`` (decode shapes) / prefill step, with explicit parameter /
+optimizer / cache / batch shardings, then ``.lower().compile()`` against
+ShapeDtypeStruct stand-ins (no allocation).  We record:
+
+  - memory_analysis()  (bytes per device: proves the cell fits)
+  - cost_analysis()    (HLO FLOPs + bytes accessed, for the roofline)
+  - collective bytes   (parsed from the optimized HLO text)
+
+Usage:
+  python -m repro.launch.dryrun --arch command-r-35b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell, shape_applicable
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_zoo, param as param_mod
+from repro.optim.optimizer import OptConfig, init_opt_state
+from repro.parallel import sharding as shard_rules
+from repro.serve.serve_step import make_serve_step
+from repro.train.train_step import make_train_step
+
+BF16 = jnp.bfloat16
+
+
+def _to_dtype(tree, dtype):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:\([^)]*\)|\S+))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64|c64)"
+                       r"\[([\d,]*)\]")
+
+_BYTES = {"f64": 8, "s64": 8, "c64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes_str, op = m.group(2), m.group(3)
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(shapes_str):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _BYTES[dt]
+        out[op] = out.get(op, 0) + nbytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+def build_cell(cfg: ArchConfig, cell: ShapeCell, mesh, opt_kind: str = None):
+    """Build (jitted fn, arg ShapeDtypeStructs) for one cell."""
+    tp = mesh.shape["model"]
+    rules = shard_rules.default_rules(mesh.axis_names, fsdp=cfg.parallel.fsdp)
+    if cfg.parallel.seq_shard_kv:
+        rules["seq_kv"] = "model"
+        rules["kv_heads"] = None
+    if cfg.parallel.seq_parallel:
+        rules["seq"] = "model"
+    if cfg.parallel.layout == "fsdp":
+        # pure ZeRO-3: no tensor parallelism; batch over every mesh
+        # axis; every weight sharded on its embed axis over all axes
+        all_axes = tuple(mesh.axis_names)
+        for k in ("mlp", "q_hidden", "kv_hidden", "heads", "kv_heads",
+                  "vocab", "inner", "expert"):
+            rules[k] = None
+        rules["batch"] = all_axes
+        rules["embed"] = all_axes
+    if cfg.moe is not None and cfg.moe.shard_mode == "tp":
+        # expert slicing (§Perf): experts replicated over model (FSDP
+        # over data for the giants), per-expert FFN dim sharded instead
+        rules["expert"] = (tuple(a for a in mesh.axis_names
+                                 if a in ("pod", "data"))
+                           if cfg.parallel.fsdp else None)
+    elif cfg.moe is not None and cfg.moe.shard_mode == "smap":
+        # hierarchical shard_map MoE: experts over 'data', FFN over
+        # 'model' (must match moe_shard_map's in_specs)
+        rules["expert"] = "data"
+    pvals, paxes = model_zoo.param_specs(cfg)
+    pvals = _to_dtype(pvals, BF16)
+    pshard = sh.tree_shardings(paxes, pvals, mesh, overrides=rules)
+    ispecs = model_zoo.input_specs(cfg, cell, tp=tp)
+
+    with shard_rules.use_mesh(mesh, rules=rules):
+        if cell.kind == "train":
+            opt_cfg = OptConfig(
+                kind=opt_kind or ("adafactor" if cfg.parallel.fsdp
+                                  else "adamw"),
+                m_dtype="bfloat16" if cfg.parallel.fsdp else "float32")
+            ostate = jax.eval_shape(lambda: init_opt_state(opt_cfg, pvals))
+            oaxes = sh.opt_state_axes(paxes, pvals, opt_cfg.kind)
+            oshard = sh.tree_shardings(oaxes, ostate, mesh, overrides=rules)
+            baxes = sh.batch_axes(ispecs)
+            bshard = sh.tree_shardings(baxes, ispecs, mesh, overrides=rules)
+            step_s = NamedSharding(mesh, PartitionSpec())
+            fn = make_train_step(cfg, opt_cfg, tp=tp)
+            jfn = jax.jit(
+                fn,
+                in_shardings=(pshard, oshard, bshard, step_s),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1))
+            args = (pvals, ostate, ispecs,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+            return jfn, args, rules
+
+        if cell.kind == "prefill":
+            from repro.serve.serve_step import make_prefill_step
+            baxes = sh.batch_axes(
+                {k: v for k, v in ispecs.items() if k != "labels"})
+            bspec = {k: v for k, v in ispecs.items() if k != "labels"}
+            bshard = sh.tree_shardings(baxes, bspec, mesh, overrides=rules)
+            fn = make_prefill_step(cfg, tp=tp, cache_len=cell.seq_len)
+            jfn = jax.jit(fn, in_shardings=(pshard, bshard))
+            return jfn, (pvals, bspec), rules
+
+        # decode
+        caxes = sh.cache_axes(cfg)
+        cshard = sh.tree_shardings(caxes, ispecs["caches"], mesh,
+                                   overrides=rules)
+        tok_s = NamedSharding(
+            mesh, shard_rules.spec_for(
+                ("batch", None), shape=ispecs["token"].shape, mesh=mesh,
+                rules=rules))
+        pos_s = NamedSharding(mesh, PartitionSpec())
+        fn = make_serve_step(cfg, tp=tp)
+        jfn = jax.jit(
+            fn,
+            in_shardings=(pshard, tok_s, cshard, pos_s),
+            out_shardings=(tok_s, cshard),
+            donate_argnums=(2,))
+        return jfn, (pvals, ispecs["token"], ispecs["caches"],
+                     ispecs["position"]), rules
+
+
+def run_cell(arch_id: str, cell: ShapeCell, multi_pod: bool,
+             opt_kind: Optional[str] = None) -> Dict[str, Any]:
+    cfg = registry.get(arch_id)
+    ok, why = shape_applicable(cfg, cell)
+    rec: Dict[str, Any] = {
+        "arch": arch_id, "shape": cell.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind,
+    }
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        jfn, args, rules = build_cell(cfg, cell, mesh, opt_kind)
+        # lowering must run under the SAME rules build_cell resolved
+        # (shard_act constraints are applied at trace time)
+        with shard_rules.use_mesh(mesh, rules=rules):
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        rec.update(
+            status="OK",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            flops=float(cost.get("flops", -1)),
+            bytes_accessed=float(cost.get("bytes accessed", -1)),
+            collective_bytes=coll,
+            collective_total=float(sum(coll.values())),
+            argument_size_bytes=getattr(mem, "argument_size_in_bytes", 0),
+            output_size_bytes=getattr(mem, "output_size_in_bytes", 0),
+            temp_size_bytes=getattr(mem, "temp_size_in_bytes", 0),
+            generated_code_size=getattr(mem, "generated_code_size_in_bytes", 0),
+            n_devices=n_dev,
+        )
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt", default=None)
+    ap.add_argument("--out", default=None, help="write JSONL here")
+    args = ap.parse_args(argv)
+
+    archs = registry.ARCH_IDS if (args.all or not args.arch) \
+        else [args.arch]
+    cells = SHAPES if (args.all or not args.shape) \
+        else [c for c in SHAPES if c.name == args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    fh = open(args.out, "a") if args.out else None
+    for aid in archs:
+        for cell in cells:
+            for mp in meshes:
+                rec = run_cell(aid, cell, mp, args.opt)
+                results.append(rec)
+                line = json.dumps(rec)
+                print(f"[dryrun] {rec['arch']:24s} {rec['shape']:12s} "
+                      f"{rec['mesh']:8s} {rec['status']}"
+                      + (f" ({rec.get('reason', rec.get('error', ''))})"
+                         if rec["status"] != "OK" else
+                         f" flops={rec['flops']:.3e} "
+                         f"coll={rec['collective_total']:.3e}B "
+                         f"compile={rec['compile_s']}s"),
+                      flush=True)
+                if fh:
+                    fh.write(line + "\n")
+                    fh.flush()
+    if fh:
+        fh.close()
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"[dryrun] done: {len(results)} cells, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

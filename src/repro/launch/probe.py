@@ -1,0 +1,131 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Must precede any jax import (see dryrun.py).
+
+"""Layer-differencing probe for exact roofline terms.
+
+XLA cost analysis counts while/scan bodies once, so the full-depth
+dry-run undercounts per-layer work by the scan trip count.  This probe
+compiles every (arch x shape) cell at depth = 1 group and 2 groups on
+the production mesh; the difference is the exact per-group contribution
+and
+
+    total = base + (n_groups - 1) * delta
+
+recovers whole-model FLOPs / bytes / collective bytes from compiled
+artifacts.  (Collectives never sit inside the time scans, so the
+collective term is exact; FLOPs remain lower bounds for the
+time-scanned mamba/xLSTM inner loops — the analytic model covers those.)
+
+Usage: python -m repro.launch.probe [--arch A] [--shape S] [--out F]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, shape_applicable
+from repro.launch.dryrun import build_cell, collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models import blocks
+from repro.parallel import sharding as shard_rules
+
+
+def probe_depths(cfg):
+    """(cfg_1group, cfg_2group, n_groups) — both probe configs UNROLL the
+    layer loop (scan_layers=False) so XLA cost analysis sees every
+    layer's FLOPs (it counts scan bodies once)."""
+    kinds, _, n_groups = blocks.group_layout(cfg)
+    g = len(kinds)
+    n_dense = cfg.moe.n_dense_layers if (cfg.moe and
+                                         cfg.block_pattern == "attn") else 0
+    par = dataclasses.replace(cfg.parallel, scan_layers=False)
+    kw1 = dict(n_layers=n_dense + g, parallel=par)
+    kw2 = dict(n_layers=n_dense + 2 * g, parallel=par)
+    if cfg.is_encoder_decoder:
+        kw1.update(n_enc_layers=1, n_layers=1)
+        kw2.update(n_enc_layers=2, n_layers=2)
+        n_groups = cfg.n_layers
+    return cfg.replace(**kw1), cfg.replace(**kw2), n_groups
+
+
+def measure(cfg, cell, mesh):
+    jfn, args, rules = build_cell(cfg, cell, mesh)
+    with shard_rules.use_mesh(mesh, rules=rules):
+        compiled = jfn.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0)),
+            "bytes": float(cost.get("bytes accessed", 0)),
+            "coll": float(sum(coll.values())),
+            "coll_by_op": coll}
+
+
+def probe_cell(arch_id, cell):
+    cfg = registry.get(arch_id)
+    ok, why = shape_applicable(cfg, cell)
+    rec = {"arch": arch_id, "shape": cell.name, "mesh": "16x16"}
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=False)
+    try:
+        c1, c2, n_groups = probe_depths(cfg)
+        t0 = time.time()
+        m1 = measure(c1, cell, mesh)
+        m2 = measure(c2, cell, mesh)
+        out = {}
+        for k in ("flops", "bytes", "coll"):
+            delta = m2[k] - m1[k]
+            out[k + "_total"] = m1[k] + (n_groups - 1) * delta
+            out[k + "_per_group"] = delta
+            out[k + "_base"] = m1[k] - delta
+        coll_ops = {op: (m2["coll_by_op"].get(op, 0)
+                         - m1["coll_by_op"].get(op, 0)) * (n_groups - 1)
+                    + m1["coll_by_op"].get(op, 0)
+                    for op in set(m1["coll_by_op"]) | set(m2["coll_by_op"])}
+        rec.update(status="OK", n_groups=n_groups, probe_s=round(
+            time.time() - t0, 1), coll_by_op=coll_ops, **out)
+    except Exception as e:
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-1500:])
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results/probe.jsonl")
+    args = ap.parse_args(argv)
+    archs = [args.arch] if args.arch else registry.ARCH_IDS
+    cells = [c for c in SHAPES if (not args.shape or c.name == args.shape)]
+    fh = open(args.out, "a") if args.out else None
+    n_fail = 0
+    for aid in archs:
+        for cell in cells:
+            rec = probe_cell(aid, cell)
+            n_fail += rec["status"] == "FAIL"
+            print(f"[probe] {rec['arch']:24s} {rec['shape']:12s} "
+                  f"{rec['status']}"
+                  + (f" flops={rec['flops_total']:.3e} "
+                     f"coll={rec['coll_total']:.3e}"
+                     if rec["status"] == "OK" else
+                     f" ({rec.get('reason', rec.get('error'))[:80]})"),
+                  flush=True)
+            if fh:
+                fh.write(json.dumps(rec) + "\n")
+                fh.flush()
+    if fh:
+        fh.close()
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,46 @@
+"""Production serving launcher: batched generation for an assigned arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch minicpm3-4b \
+        --batch 4 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import registry
+from repro.models import model_zoo, param
+from repro.serve.serve_step import generate
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    if cfg.is_encoder_decoder:
+        raise SystemExit("enc-dec serving: see tests/test_archs.py whisper "
+                         "decode path")
+    params = param.values(model_zoo.init(cfg, jax.random.key(0)))
+    prompt = jax.random.randint(jax.random.key(1),
+                                (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    t0 = time.perf_counter()
+    out = generate(cfg, params, prompt, args.new_tokens,
+                   cache_len=args.prompt_len + args.new_tokens + 1)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    print(f"{cfg.name}: generated {out.shape} in {dt:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

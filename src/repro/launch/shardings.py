@@ -1,0 +1,96 @@
+"""Logical-axes trees for non-parameter state (caches, optimizer, batch).
+
+Parameters carry their own axes (models.param.P); caches and optimizer
+states get their axes derived here so the dry-run can build explicit
+in/out shardings for ``serve_step`` and ``train_step``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+from repro.parallel.sharding import spec_for
+
+AX_ATTN = {"k": ("batch", "seq_kv", "kv_heads", None),
+           "v": ("batch", "seq_kv", "kv_heads", None)}
+AX_MLA = {"ckv": ("batch", "seq_kv", None), "kr": ("batch", "seq_kv", None)}
+AX_MAMBA = {"conv": ("batch", None, "inner"),
+            "h": ("batch", "inner", "state")}
+AX_MLSTM = {"conv": ("batch", None, "inner"),
+            "state": (("batch", None, None, None),
+                      ("batch", None, None), ("batch", None))}
+AX_SLSTM = (("batch", None, None),) * 3 + (("batch", None, None),)
+
+
+def is_axes(x) -> bool:
+    """A leaf axes-tuple: tuple of str/None (not a tuple of tuples)."""
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def _layer_cache_axes(kind: str):
+    return {"attn": AX_ATTN, "mla": AX_MLA, "mamba": AX_MAMBA,
+            "mlstm": AX_MLSTM, "slstm": AX_SLSTM}[kind]
+
+
+def cache_axes(cfg: ArchConfig):
+    """Axes tree matching model_zoo.init_caches / input_specs caches."""
+    pre = lambda t: ("layers",) + t
+    if cfg.is_encoder_decoder:
+        return {"self": jax.tree.map(pre, AX_ATTN, is_leaf=is_axes),
+                "cross": jax.tree.map(pre, AX_ATTN, is_leaf=is_axes)}
+    kinds, _, _ = blocks.group_layout(cfg)
+    group = {f"l{i}": _layer_cache_axes(k) for i, k in enumerate(kinds)}
+    stacked = jax.tree.map(pre, group, is_leaf=is_axes)
+    out = {"groups": stacked}
+    n_dense = cfg.moe.n_dense_layers if cfg.moe else 0
+    if n_dense and cfg.block_pattern == "attn":
+        kind = "mla" if cfg.attn_type == "mla" else "attn"
+        out["prefix"] = [_layer_cache_axes(kind) for _ in range(n_dense)]
+    return out
+
+
+def batch_axes(batch_spec: Dict[str, Any]):
+    """Axes for a train/prefill input batch dict."""
+    out = {}
+    for k, v in batch_spec.items():
+        nd = len(v.shape)
+        out[k] = ("batch",) + (None,) * (nd - 1)
+    return out
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh, overrides=None):
+    """NamedShardings for an (axes, shapes) tree pair."""
+    is_ax = is_axes
+
+    def one(ax, sd):
+        return NamedSharding(mesh, spec_for(ax, shape=sd.shape, mesh=mesh,
+                                            rules=overrides))
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_ax)
+
+
+def opt_state_axes(param_axes, param_shapes, kind: str):
+    """Axes for optimizer state, derived from parameter axes."""
+    is_ax = is_axes
+    if kind == "adamw":
+        return {"m": param_axes, "v": param_axes, "count": ()}
+
+    def is_matrix(sd):
+        return len(sd.shape) >= 2 and sd.shape[-1] > 1 and sd.shape[-2] > 1
+
+    def vr(ax, sd):
+        return ax[:-1] if is_matrix(sd) else ax
+
+    def vc(ax, sd):
+        return (ax[:-2] + ax[-1:]) if is_matrix(sd) else (None,) * len(sd.shape)
+
+    return {"m": param_axes,
+            "vr": jax.tree.map(vr, param_axes, param_shapes, is_leaf=is_ax),
+            "vc": jax.tree.map(vc, param_axes, param_shapes, is_leaf=is_ax),
+            "count": ()}

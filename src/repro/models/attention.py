@@ -1,0 +1,187 @@
+"""Attention: MHA/GQA/MQA with RoPE, sliding-window, QK-norm, KV caches.
+
+Two entry points:
+  * ``attention(...)``            — full-sequence (train / prefill)
+  * ``attention_decode(...)``     — single-token step against a KV cache
+
+KV-head handling: when the model-parallel degree exceeds ``n_kv_heads``
+the K/V *activations* (and cache) are repeated ``kv_repeat``-fold so the
+head axis shards evenly — parameters stay faithful to the architecture.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, init_linear, linear, rms_norm_simple
+from repro.models.param import ones_init
+from repro.parallel.sharding import shard_act
+
+
+def kv_repeat_for(cfg, tp_hint: int) -> int:
+    """Replication factor for KV heads given a TP degree hint."""
+    if tp_hint <= cfg.n_kv_heads:
+        return 1
+    return max(1, min(cfg.n_heads, tp_hint) // cfg.n_kv_heads)
+
+
+def init_attention(key, cfg):
+    dh = cfg.head_dim_()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(k1, cfg.d_model, cfg.n_heads * dh,
+                          ("embed", "q_hidden"), cfg.use_bias),
+        "wk": init_linear(k2, cfg.d_model, cfg.n_kv_heads * dh,
+                          ("embed", "kv_hidden"), cfg.use_bias),
+        "wv": init_linear(k3, cfg.d_model, cfg.n_kv_heads * dh,
+                          ("embed", "kv_hidden"), cfg.use_bias),
+        "wo": init_linear(k4, cfg.n_heads * dh, cfg.d_model,
+                          ("q_hidden", "embed"), cfg.use_bias),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ones_init((dh,), (None,))
+        p["k_norm"] = ones_init((dh,), (None,))
+    return p
+
+
+def _qkv(params, x, cfg, sin, cos, kv_repeat: int):
+    B, T, _ = x.shape
+    dh = cfg.head_dim_()
+    q = linear(params["wq"], x).reshape(B, T, cfg.n_heads, dh)
+    k = linear(params["wk"], x).reshape(B, T, cfg.n_kv_heads, dh)
+    v = linear(params["wv"], x).reshape(B, T, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm_simple(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm_simple(k, params["k_norm"], cfg.norm_eps)
+    if sin is not None:
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    if kv_repeat > 1:
+        k = jnp.repeat(k, kv_repeat, axis=2)
+        v = jnp.repeat(v, kv_repeat, axis=2)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """Grouped scaled-dot-product attention.
+
+    q: (B, T, H, dh); k/v: (B, S, Kv, dh) with H % Kv == 0.
+    mask: (T, S) or (B, 1, 1, T, S) boolean, True = attend.
+    """
+    B, T, H, dh = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    q = q.reshape(B, T, Kv, G, dh)
+    scale = dh ** -0.5
+    scores = jnp.einsum("btkgd,bskd->bkgts", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if cfg.logit_softcap:
+        scores = cfg.logit_softcap * jnp.tanh(scores / cfg.logit_softcap)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", w, v)
+    return out.reshape(B, T, H, dh)
+
+
+def causal_mask(T: int, S: int, window: int = 0, offset: int = 0):
+    """mask[t, s] = attendable. ``offset`` = absolute pos of query 0 minus
+    absolute pos of key 0 (for prefill-with-history)."""
+    t = jnp.arange(T)[:, None] + offset
+    s = jnp.arange(S)[None, :]
+    m = s <= t
+    if window:
+        m &= s > (t - window)
+    return m
+
+
+def attention(params, x, cfg, *, sin=None, cos=None, kv_repeat: int = 1,
+              causal: bool = True, make_cache_len: int = 0):
+    """Full-sequence attention. Returns (y, cache_or_None)."""
+    B, T, _ = x.shape
+    q, k, v = _qkv(params, x, cfg, sin, cos, kv_repeat)
+    q = shard_act(q, ("batch", None, "heads", None))
+    k = shard_act(k, ("batch", "seq_kv", "heads", None))
+    v = shard_act(v, ("batch", "seq_kv", "heads", None))
+    mask = causal_mask(T, T, cfg.sliding_window) if causal else None
+    out = _sdpa(q, k, v, mask, cfg)
+    y = linear(params["wo"], out.reshape(B, T, -1))
+    cache = None
+    if make_cache_len:
+        L = make_cache_len
+        if cfg.sliding_window:
+            L = min(L, cfg.sliding_window)
+            k, v = k[:, -L:], v[:, -L:]
+        pad = [(0, 0), (0, L - k.shape[1]), (0, 0), (0, 0)]
+        cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    return y, cache
+
+
+def init_cache(cfg, batch: int, max_len: int, kv_repeat: int = 1,
+               dtype=jnp.bfloat16):
+    """Empty decode cache. SWA archs get a ring buffer of window size."""
+    L = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kv = cfg.n_kv_heads * kv_repeat
+    dh = cfg.head_dim_()
+    shape = (batch, L, kv, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(params, x, cfg, cache, position, *, sin=None, cos=None,
+                     kv_repeat: int = 1):
+    """One-token decode. x: (B, 1, d). position: scalar int32 (tokens so far).
+
+    Full-attention caches index by absolute position; sliding-window caches
+    are ring buffers indexed by ``position % window``.
+    """
+    B, T, _ = x.shape
+    assert T == 1
+    q, k, v = _qkv(params, x, cfg, sin, cos, kv_repeat)
+    L = cache["k"].shape[1]
+    slot = jnp.where(cfg.sliding_window > 0, position % L, position)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    ck = shard_act(ck, ("batch", "seq_kv", "heads", None))
+    cv = shard_act(cv, ("batch", "seq_kv", "heads", None))
+    idx = jnp.arange(L)
+    if cfg.sliding_window:
+        # ring buffer: until it wraps only slots <= position are valid;
+        # once full, every slot holds one of the last L tokens.
+        valid = ((position < L) & (idx <= position)) | (position >= L)
+    else:
+        valid = idx <= position
+    mask = valid[None, None, None, None, :]
+    out = _sdpa(q, ck, cv, mask, cfg)
+    y = linear(params["wo"], out.reshape(B, 1, -1))
+    return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+def init_cross_attention(key, cfg):
+    return init_attention(key, cfg)
+
+
+def cross_attention(params, x, enc_kv, cfg, kv_repeat: int = 1):
+    """x: (B, T, d) decoder side; enc_kv: precomputed {"k","v"} from encoder."""
+    B, T, _ = x.shape
+    dh = cfg.head_dim_()
+    q = linear(params["wq"], x).reshape(B, T, cfg.n_heads, dh)
+    out = _sdpa(q, enc_kv["k"], enc_kv["v"], None, cfg)
+    return linear(params["wo"], out.reshape(B, T, -1))
+
+
+def encode_cross_kv(params, enc_out, cfg, kv_repeat: int = 1):
+    B, S, _ = enc_out.shape
+    dh = cfg.head_dim_()
+    k = linear(params["wk"], enc_out).reshape(B, S, cfg.n_kv_heads, dh)
+    v = linear(params["wv"], enc_out).reshape(B, S, cfg.n_kv_heads, dh)
+    if kv_repeat > 1:
+        k = jnp.repeat(k, kv_repeat, axis=2)
+        v = jnp.repeat(v, kv_repeat, axis=2)
+    return {"k": k, "v": v}

@@ -1,0 +1,176 @@
+"""Encoder-decoder transformer (whisper-style).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S, d_model) for the encoder.
+Positions use fixed sinusoidal tables (no RoPE), layernorm + biases +
+non-gated GELU, matching the whisper family.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.layers import (embed, init_embedding, init_mlp, init_norm,
+                                 init_unembed, mlp, norm, unembed)
+from repro.models.param import stack_layers
+from repro.parallel.sharding import shard_act
+
+
+def _maybe_scan(cfg, body, init, xs):
+    """lax.scan, or an unrolled python loop in probe mode
+    (cfg.parallel.scan_layers=False) so per-layer FLOPs are visible to
+    XLA cost analysis."""
+    if cfg.parallel.scan_layers:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    stacked = (None if all(y is None for y in ys)
+               else jax.tree.map(lambda *a: jnp.stack(a), *ys))
+    return carry, stacked
+
+
+def sinusoid_pos(T: int, d: int, offset=0):
+    pos = jnp.arange(T) + offset
+    inv = 1.0 / (10000 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos[:, None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+# ---------------------------------------------------------------------------
+def init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": init_norm(cfg),
+            "attn": attn_mod.init_attention(k1, cfg),
+            "norm2": init_norm(cfg),
+            "mlp": init_mlp(k2, cfg)}
+
+
+def init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": init_norm(cfg),
+            "self_attn": attn_mod.init_attention(k1, cfg),
+            "norm2": init_norm(cfg),
+            "cross_attn": attn_mod.init_cross_attention(k2, cfg),
+            "norm3": init_norm(cfg),
+            "mlp": init_mlp(k3, cfg)}
+
+
+def init_encdec(key, cfg):
+    ks = jax.random.split(key, 6)
+    enc = jax.vmap(lambda k: init_enc_layer(k, cfg))(
+        jax.random.split(ks[0], cfg.n_enc_layers))
+    dec = jax.vmap(lambda k: init_dec_layer(k, cfg))(
+        jax.random.split(ks[1], cfg.n_layers))
+    return {
+        "enc_layers": stack_layers(enc),
+        "enc_norm": init_norm(cfg),
+        "dec_embed": init_embedding(ks[2], cfg),
+        "dec_layers": stack_layers(dec),
+        "dec_norm": init_norm(cfg),
+        "unembed": init_unembed(ks[3], cfg),
+    }
+
+
+def encode(params, frames, cfg, *, tp: int = 1):
+    """frames: (B, S, d) stub embeddings -> encoder output."""
+    x = (frames + sinusoid_pos(frames.shape[1], cfg.d_model)
+         .astype(frames.dtype)).astype(jnp.bfloat16)
+    x = shard_act(x, ("batch", None, "embed"))
+    kv_rep = attn_mod.kv_repeat_for(cfg, tp)
+
+    def body(x, lp):
+        h = norm(lp["norm1"], x, cfg)
+        y, _ = attn_mod.attention(lp["attn"], h, cfg, causal=False,
+                                  kv_repeat=kv_rep)
+        x = x + y
+        x = x + mlp(lp["mlp"], norm(lp["norm2"], x, cfg), cfg)
+        return shard_act(x, ("batch", None, "embed")), None
+
+    x, _ = _maybe_scan(cfg, body, x, params["enc_layers"])
+    return norm(params["enc_norm"], x, cfg)
+
+
+def _dec_layer(lp, x, enc_kv, cfg, kv_rep, cache=None, position=None,
+               make_cache_len=0):
+    h = norm(lp["norm1"], x, cfg)
+    if cache is not None:
+        y, new_cache = attn_mod.attention_decode(
+            lp["self_attn"], h, cfg, cache, position, kv_repeat=kv_rep)
+    else:
+        y, new_cache = attn_mod.attention(lp["self_attn"], h, cfg,
+                                          kv_repeat=kv_rep,
+                                          make_cache_len=make_cache_len)
+    x = x + y
+    h = norm(lp["norm2"], x, cfg)
+    x = x + attn_mod.cross_attention(lp["cross_attn"], h, enc_kv, cfg)
+    x = x + mlp(lp["mlp"], norm(lp["norm3"], x, cfg), cfg)
+    return x, new_cache
+
+
+def decode_train(params, enc_out, dec_tokens, cfg, *, tp: int = 1,
+                 make_cache_len: int = 0):
+    """Teacher-forced decoder pass. Returns (logits, caches)."""
+    kv_rep = attn_mod.kv_repeat_for(cfg, tp)
+    x = embed(params["dec_embed"], dec_tokens, cfg)
+    x = (x + sinusoid_pos(x.shape[1], cfg.d_model).astype(x.dtype))
+    x = shard_act(x, ("batch", None, "embed"))
+
+    def body(x, lp):
+        # cross-attn K/V computed per layer from encoder output
+        enc_kv = attn_mod.encode_cross_kv(lp["cross_attn"], enc_out, cfg,
+                                          kv_rep)
+        x, cache = _dec_layer(lp, x, enc_kv, cfg, kv_rep,
+                              make_cache_len=make_cache_len)
+        return x, cache
+
+    x, caches = _maybe_scan(cfg, body, x, params["dec_layers"])
+    x = norm(params["dec_norm"], x, cfg)
+    logits = unembed(params["unembed"], x, cfg)
+    return logits, (caches if make_cache_len else None)
+
+
+def init_dec_caches(params, enc_out, cfg, batch: int, max_len: int,
+                    tp: int = 1, dtype=jnp.bfloat16):
+    """Self-attn caches + precomputed cross K/V for every decoder layer."""
+    kv_rep = attn_mod.kv_repeat_for(cfg, tp)
+    n = cfg.n_layers
+    self_c = attn_mod.init_cache(cfg, batch, max_len, kv_rep, dtype)
+    self_c = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape), self_c)
+
+    def one(lp):
+        return attn_mod.encode_cross_kv(lp["cross_attn"], enc_out, cfg, kv_rep)
+
+    cross = jax.lax.map(one, params["dec_layers"])
+    return {"self": self_c, "cross": cross}
+
+
+def decode_step(params, token, cfg, caches, position, *, tp: int = 1):
+    """token: (B, 1). Returns (logits, new_caches)."""
+    kv_rep = attn_mod.kv_repeat_for(cfg, tp)
+    x = embed(params["dec_embed"], token, cfg)
+    x = x + sinusoid_pos(1, cfg.d_model, offset=position).astype(x.dtype)
+
+    def body(x, xs):
+        lp, self_c, cross_kv = xs
+        h = norm(lp["norm1"], x, cfg)
+        y, new_c = attn_mod.attention_decode(lp["self_attn"], h, cfg, self_c,
+                                             position, kv_repeat=kv_rep)
+        x = x + y
+        h = norm(lp["norm2"], x, cfg)
+        x = x + attn_mod.cross_attention(lp["cross_attn"], h, cross_kv, cfg)
+        x = x + mlp(lp["mlp"], norm(lp["norm3"], x, cfg), cfg)
+        return x, new_c
+
+    x, new_self = _maybe_scan(
+        cfg, body, x, (params["dec_layers"], caches["self"],
+                       caches["cross"]))
+    x = norm(params["dec_norm"], x, cfg)
+    logits = unembed(params["unembed"], x, cfg)
+    return logits, {"self": new_self, "cross": caches["cross"]}

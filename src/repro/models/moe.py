@@ -1,0 +1,158 @@
+"""Mixture-of-Experts with hybrid dense/tail dispatch.
+
+This is the paper's spmv insight (§4.3: dense rows -> GPU, sparse tail ->
+CPU) applied to MoE routing: tokens are packed per-expert up to a
+*capacity* into a dense grouped-matmul path (MXU-friendly, fully
+regular), and the *overflow tail* is re-dispatched through one or more
+extra small grouped-matmul passes instead of being dropped.
+
+Dispatch is group-wise (group = batch row) so the dispatch buffers shard
+over (pod, data) x (model=expert) with no global resharding.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ACTS, init_linear, linear
+from repro.models.param import P, dense_init
+from repro.parallel.sharding import shard_act
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    E, dff, d = m.n_routed, m.d_ff, cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": init_linear(ks[0], d, E, ("embed", None)),
+        "w_up": dense_init(ks[1], (E, d, dff), ("expert", "embed", "mlp"),
+                           fan_in=d),
+        "w_gate": dense_init(ks[2], (E, d, dff), ("expert", "embed", "mlp"),
+                             fan_in=d),
+        "w_down": dense_init(ks[3], (E, dff, d), ("expert", "mlp", "embed"),
+                             fan_in=dff),
+    }
+    if m.n_shared:
+        # shared experts fused into one wide dense GLU
+        p["shared"] = {
+            "up": init_linear(ks[4], d, m.n_shared * dff, ("embed", "mlp")),
+            "gate": init_linear(jax.random.fold_in(ks[4], 1), d,
+                                m.n_shared * dff, ("embed", "mlp")),
+            "down": init_linear(jax.random.fold_in(ks[4], 2),
+                                m.n_shared * dff, d, ("mlp", "embed")),
+        }
+    return p
+
+
+def _dispatch_indices(flat_expert: jnp.ndarray, E: int):
+    """flat_expert: (Nk,) expert id per assignment (one group).
+
+    Returns (sort order, expert id sorted, position-in-expert) — the
+    paper's 'sort rows by density then bin' transform.
+    """
+    order = jnp.argsort(flat_expert)
+    sorted_e = flat_expert[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos = jnp.arange(flat_expert.shape[0]) - starts[sorted_e]
+    return order, sorted_e, pos
+
+
+def _dispatch_onehot(flat_expert: jnp.ndarray, E: int):
+    """Sort-free dispatch (§Perf): position-in-expert via a one-hot
+    cumsum; no argsort, no un-sort gather.  Returns (expert ids,
+    positions) in ORIGINAL assignment order."""
+    oh = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)   # (Nk, E)
+    pos = (jnp.cumsum(oh, axis=0) - 1)                     # (Nk, E)
+    pos = jnp.take_along_axis(pos, flat_expert[:, None], axis=1)[:, 0]
+    return flat_expert, pos
+
+
+def _one_pass(x_sorted, weights, sorted_e, pos, C: int, E: int, cfg):
+    """Scatter -> grouped matmul -> gather for one capacity pass.
+
+    x_sorted: (Nk, d) token features in dispatch order (one group).
+    Returns per-assignment outputs (Nk, d); assignments with pos >= C
+    contribute zeros (handled by later passes).
+    """
+    d = x_sorted.shape[-1]
+    act = ACTS[cfg.act]
+    keep = pos < C
+    e_idx = jnp.where(keep, sorted_e, E)        # E == drop row
+    p_idx = jnp.where(keep, pos, 0)
+    buf = jnp.zeros((E + 1, C, d), x_sorted.dtype)
+    buf = buf.at[e_idx, p_idx].set(x_sorted, mode="drop")
+    buf = buf[:E]
+    if cfg.moe.shard_dispatch:
+        # keep the dispatch buffer expert-sharded end-to-end (§Perf):
+        # under vmap the batch dim is added in front automatically
+        buf = shard_act(buf, ("expert", None, None))
+    # grouped matmul (dense path — the MXU-friendly "dense rows")
+    h = jnp.einsum("ecd,edf->ecf", buf, weights["w_up"].astype(buf.dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, weights["w_gate"].astype(buf.dtype))
+    h = h * act(g)
+    out = jnp.einsum("ecf,efd->ecd", h, weights["w_down"].astype(buf.dtype))
+    if cfg.moe.shard_dispatch:
+        out = shard_act(out, ("expert", None, None))
+    gathered = out[e_idx, p_idx]                # (Nk, d)
+    return jnp.where(keep[:, None], gathered, 0.0)
+
+
+def moe_ffn(params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, d). Returns (y, aux_loss)."""
+    m = cfg.moe
+    if m.shard_mode == "smap":
+        from repro.parallel.sharding import active_mesh
+        if active_mesh() is not None:
+            from repro.models.moe_shard_map import moe_ffn_shard_map
+            return moe_ffn_shard_map(params, x, cfg)
+    B, T, d = x.shape
+    E, k = m.n_routed, m.top_k
+    logits = linear(params["router"], x).astype(jnp.float32)  # (B,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topk_idx = jax.lax.top_k(probs, k)             # (B,T,k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)          # renormalize
+
+    # ---- load-balancing aux loss (Switch-style) ----
+    me = jnp.mean(probs, axis=(0, 1))                               # (E,)
+    one_hot = jax.nn.one_hot(topk_idx, E, dtype=jnp.float32)
+    ce = jnp.mean(jnp.sum(one_hot, axis=2), axis=(0, 1)) / k        # (E,)
+    aux = m.aux_loss_coef * E * jnp.sum(me * ce)
+
+    C = max(1, int(T * k / E * m.capacity_factor))
+
+    def per_group(xg, idxg, gateg):
+        """xg: (T,d); idxg: (T,k); gateg: (T,k)."""
+        flat_e = idxg.reshape(-1)
+        xk = jnp.repeat(xg, k, axis=0)          # (T*k, d) feature per assignment
+        if m.dispatch == "onehot":
+            # sort-free dispatch (§Perf optimized path)
+            e_ids, pos = _dispatch_onehot(flat_e, E)
+            x_in = xk
+        else:
+            order, e_ids, pos = _dispatch_indices(flat_e, E)
+            x_in = xk[order]
+        y_out = _one_pass(x_in, params, e_ids, pos, C, E, cfg)
+        # ---- the sparse tail: re-dispatch overflow at C_tail ----
+        for p_ in range(m.overflow_passes):
+            C_tail = max(1, C // 4)
+            pos_t = pos - C - p_ * C_tail
+            y_out = y_out + _one_pass(
+                x_in, params, e_ids,
+                jnp.where(pos_t >= 0, pos_t, C_tail), C_tail, E, cfg)
+        if m.dispatch == "onehot":
+            y_flat = y_out.reshape(T, k, d)
+        else:
+            inv = jnp.argsort(order)            # un-sort
+            y_flat = y_out[inv].reshape(T, k, d)
+        return jnp.sum(y_flat * gateg[..., None].astype(y_flat.dtype), axis=1)
+
+    y = jax.vmap(per_group)(x, topk_idx, gate_vals)
+    y = shard_act(y, ("batch", None, None))
+    if "shared" in params:
+        sp = params["shared"]
+        h = linear(sp["up"], x) * ACTS[cfg.act](linear(sp["gate"], x))
+        y = y + linear(sp["down"], h)
+    return y, aux

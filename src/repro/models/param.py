@@ -1,0 +1,85 @@
+"""Parameter-with-logical-axes container.
+
+Init functions return pytrees of :class:`P` leaves (value + logical axis
+names).  ``split`` separates them into a plain value tree (what apply
+functions consume) and an axes tree (what ``parallel.sharding`` consumes
+to build NamedShardings).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class P:
+    """A parameter leaf: array value + logical axis names (len == ndim)."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: Tuple[Any, ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"P(shape={getattr(self.value, 'shape', None)}, axes={self.axes})"
+
+
+def _flatten(p: P):
+    return (p.value,), p.axes
+
+
+def _unflatten(axes, children):
+    return P(children[0], axes)
+
+
+jax.tree_util.register_pytree_node(P, _flatten, _unflatten)
+
+
+def is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def values(tree):
+    """Strip a P-tree down to a plain array tree."""
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=is_p)
+
+
+def axes(tree):
+    """Extract the logical-axes tree (same structure, tuples at leaves)."""
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=is_p)
+
+
+def stack_layers(tree, prepend: str = "layers"):
+    """After a vmap-ed init, prepend the scan axis name to every leaf."""
+    return jax.tree.map(
+        lambda p: P(p.value, (prepend,) + p.axes), tree, is_leaf=is_p)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, axes, dtype=jnp.float32, scale: float = 1.0,
+               fan_in: int = 0) -> P:
+    fan = fan_in or shape[0]
+    std = scale / np.sqrt(max(fan, 1))
+    return P(jax.random.normal(key, shape, dtype) * jnp.asarray(std, dtype), axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.float32) -> P:
+    return P(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32) -> P:
+    return P(jnp.ones(shape, dtype), axes)
+
+
+def embed_init(key, shape, axes, dtype=jnp.float32) -> P:
+    return P(jax.random.normal(key, shape, dtype) * 0.02, axes)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(values(tree))
+    return int(sum(int(np.prod(l.shape)) for l in leaves))

@@ -1,0 +1,137 @@
+"""Mamba (S6) selective-state-space block.
+
+Training/prefill runs a ``lax.scan`` over time (keeps HLO compact for the
+1-core compile budget and is linear in sequence length — this is why the
+hybrid/ssm archs support the ``long_500k`` cell).  Decode is a single
+recurrent update against ``(conv_state, ssm_state)``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+from repro.models.param import P, dense_init, ones_init, zeros_init
+from repro.parallel.sharding import shard_act
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or max(1, math.ceil(cfg.d_model / 16))
+    return d_inner, s.d_state, s.d_conv, dt_rank
+
+
+def init_mamba(key, cfg):
+    d_inner, d_state, d_conv, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": init_linear(ks[0], cfg.d_model, 2 * d_inner,
+                               ("embed", "inner")),
+        "conv_w": dense_init(ks[1], (d_conv, d_inner), ("conv", "inner"),
+                             fan_in=d_conv),
+        "conv_b": zeros_init((d_inner,), ("inner",)),
+        "x_proj": init_linear(ks[2], d_inner, dt_rank + 2 * d_state,
+                              ("inner", None)),
+        "dt_proj": init_linear(ks[3], dt_rank, d_inner, (None, "inner"),
+                               use_bias=True),
+        "out_proj": init_linear(ks[4], d_inner, cfg.d_model,
+                                ("inner", "embed")),
+        # S4D-real initialization of A (negative log-spaced)
+        "A_log": P(jnp.log(jnp.broadcast_to(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, d_state))),
+            ("inner", "state")),
+        "D": ones_init((d_inner,), ("inner",)),
+    }
+    return p
+
+
+def _ssm_params(params, u, cfg):
+    """u: (B, T, d_inner) -> (dt, B_mat, C_mat) data-dependent params."""
+    d_inner, d_state, d_conv, dt_rank = _dims(cfg)
+    xdbc = linear(params["x_proj"], u)
+    dt = xdbc[..., :dt_rank]
+    Bm = xdbc[..., dt_rank:dt_rank + d_state]
+    Cm = xdbc[..., dt_rank + d_state:]
+    dt = jax.nn.softplus(linear(params["dt_proj"], dt))     # (B,T,d_inner)
+    return dt, Bm, Cm
+
+
+def _conv_full(params, x, cfg):
+    """Causal depthwise conv over time. x: (B, T, d_inner)."""
+    d_inner, _, d_conv, _ = _dims(cfg)
+    w = params["conv_w"].astype(x.dtype)                    # (K, d_inner)
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(d_conv))
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def mamba(params, x, cfg, *, make_cache: bool = False):
+    """Full-sequence Mamba block. x: (B, T, d_model)."""
+    d_inner, d_state, d_conv, _ = _dims(cfg)
+    B_, T, _ = x.shape
+    xz = linear(params["in_proj"], x)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = jax.nn.silu(_conv_full(params, u, cfg))
+    u = shard_act(u, ("batch", None, "inner"))
+
+    dt, Bm, Cm = _ssm_params(params, u, cfg)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))       # (d_inner, d_state)
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)     # (B,T,di,ds)
+    dBu = (dt * u).astype(jnp.float32)[..., None] * \
+        Bm.astype(jnp.float32)[..., None, :]                # (B,T,di,ds)
+
+    def step(h, inp):
+        dA_t, dBu_t, C_t = inp
+        h = dA_t * h + dBu_t                                # (B,di,ds)
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B_, d_inner, d_state), jnp.float32)
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBu, 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)              # (B,T,di)
+    y = y + u * params["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = linear(params["out_proj"], y)
+    cache = None
+    if make_cache:
+        # conv state: last (d_conv-1) inputs of the *pre-conv* stream
+        pre = jnp.split(xz, 2, axis=-1)[0]
+        conv_state = pre[:, -(d_conv - 1):] if T >= d_conv - 1 else jnp.pad(
+            pre, ((0, 0), (d_conv - 1 - T, 0), (0, 0)))
+        cache = {"conv": conv_state, "h": hT}
+    return out, cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    d_inner, d_state, d_conv, _ = _dims(cfg)
+    return {"conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+            "h": jnp.zeros((batch, d_inner, d_state), jnp.float32)}
+
+
+def mamba_decode(params, x, cfg, cache):
+    """Single-token recurrent update. x: (B, 1, d_model)."""
+    d_inner, d_state, d_conv, _ = _dims(cfg)
+    B_ = x.shape[0]
+    xz = linear(params["in_proj"], x)
+    u, z = jnp.split(xz, 2, axis=-1)                        # (B,1,di)
+    window = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
+    w = params["conv_w"].astype(u.dtype)
+    u_c = jnp.einsum("bkd,kd->bd", window, w)[:, None] + \
+        params["conv_b"].astype(u.dtype)
+    u_c = jax.nn.silu(u_c)
+    dt, Bm, Cm = _ssm_params(params, u_c, cfg)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)[:, 0]
+    dBu = ((dt * u_c).astype(jnp.float32)[..., None] *
+           Bm.astype(jnp.float32)[..., None, :])[:, 0]
+    h = dA * cache["h"] + dBu
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0].astype(jnp.float32))[:, None]
+    y = y.astype(x.dtype) + u_c * params["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = linear(params["out_proj"], y)
+    return out, {"conv": window[:, 1:], "h": h}

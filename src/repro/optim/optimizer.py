@@ -1,0 +1,150 @@
+"""Optimizers: AdamW and Adafactor (factored second moment for the
+trillion-parameter archs), with global-norm clipping and LR schedules.
+
+Optimizer state inherits each parameter's sharding (states are tree-maps
+over params), so FSDP params give FSDP optimizer state for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"              # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    # bf16 first moment halves optimizer memory for the giant archs
+    m_dtype: str = "float32"
+
+
+def schedule(cfg: OptConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def _is_matrix(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def init_opt_state(cfg: OptConfig, params):
+    mdt = jnp.dtype(cfg.m_dtype)
+    if cfg.kind == "adamw":
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    if cfg.kind == "adafactor":
+        def vr(p):
+            if _is_matrix(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            if _is_matrix(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,) * p.ndim, jnp.float32)
+
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params),
+            "vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.kind)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def apply_updates(cfg: OptConfig, params, grads, state, step):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    lr = schedule(cfg, step)
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    if cfg.kind == "adamw":
+        bc1 = 1 - cfg.b1 ** cf
+        bc2 = 1 - cfg.b2 ** cf
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+            v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+            mh = m2 / bc1
+            vh = v2 / bc2
+            step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:
+                step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * step_
+            return p2.astype(p.dtype), m2.astype(m.dtype), v2
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": new_m, "v": new_v, "count": count}
+    else:  # adafactor w/ momentum
+        decay = 1.0 - cf ** -0.8
+
+        def upd(p, g, m, vr, vc):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + 1e-30
+            if _is_matrix(p):
+                vr2 = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc2 = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+                rfac = (vr2 / jnp.clip(
+                    jnp.mean(vr2, axis=-1, keepdims=True), 1e-30))[..., None]
+                u = gf / (jnp.sqrt(rfac) * jnp.sqrt(vc2)[..., None, :] + cfg.eps)
+            else:
+                vr2 = decay * vr + (1 - decay) * g2
+                vc2 = vc
+                u = gf / (jnp.sqrt(vr2) + cfg.eps)
+            # update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * u
+            step_ = m2
+            if p.ndim >= 2:
+                step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * step_
+            return p2.astype(p.dtype), m2.astype(m.dtype), vr2, vc2
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["vr"],
+                           state["vc"])
+        isleaf = lambda x: isinstance(x, tuple)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=isleaf)
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=isleaf)
+        new_vr = jax.tree.map(lambda t: t[2], out, is_leaf=isleaf)
+        new_vc = jax.tree.map(lambda t: t[3], out, is_leaf=isleaf)
+        new_state = {"m": new_m, "vr": new_vr, "vc": new_vc, "count": count}
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_p, new_state, metrics

@@ -1,0 +1,147 @@
+"""Logical-axis -> mesh-axis sharding rules (DP/TP/EP/SP + pod).
+
+Models annotate parameters and activations with *logical* axis names;
+this module resolves them to :class:`jax.sharding.NamedSharding` given
+the active mesh.  Outside a mesh context every call is a no-op so the
+same model code runs in single-device smoke tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# ---------------------------------------------------------------------------
+# Rules: logical axis -> mesh axis (or tuple of mesh axes)
+# ---------------------------------------------------------------------------
+# "batch" spans the pure-data axes; "model" carries TP/EP/vocab; "fsdp"
+# additionally spreads giant parameters over the data axes (ZeRO-3 style).
+def default_rules(mesh_axes: Sequence[str], fsdp: bool = False) -> Dict:
+    data_axes = tuple(a for a in mesh_axes if a in ("pod", "data"))
+    rules = {
+        "batch": data_axes,
+        "embed": data_axes if fsdp else None,
+        "vocab": "model",
+        "mlp": "model",
+        "q_hidden": "model",
+        "kv_hidden": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "expert": "model",
+        "kv_lora": None,
+        "q_lora": None,
+        "layers": None,
+        "conv": None,
+        "state": None,
+        "inner": "model",
+        "seq": None,
+        "seq_kv": None,          # flipped to "model" under seq_shard_kv
+        None: None,
+    }
+    return rules
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[Dict] = None, fsdp: bool = False,
+             overrides: Optional[Dict] = None):
+    """Activate (mesh, rules) for shard_act / make_sharding calls."""
+    r = dict(rules or default_rules(mesh.axis_names, fsdp=fsdp))
+    if overrides:
+        r.update(overrides)
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, r
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _axis_size(mesh: Mesh, mesh_axes) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    return int(np.prod([mesh.shape[a] for a in mesh_axes]))
+
+
+def spec_for(logical_axes: Sequence, shape: Optional[Tuple[int, ...]] = None,
+             mesh: Optional[Mesh] = None, rules: Optional[Dict] = None
+             ) -> PartitionSpec:
+    """Resolve logical axes to a PartitionSpec.
+
+    If ``shape`` is given, any mapping whose mesh-axis size does not
+    divide the dim is dropped (replicated) — this is how e.g. 8 KV heads
+    on a 16-way model axis degrade gracefully.
+    """
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules or {}
+    used = set()
+    out = []
+    for i, ax in enumerate(logical_axes):
+        m = rules.get(ax, None)
+        if m is None:
+            out.append(None)
+            continue
+        key = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+        if any(k in used for k in key):
+            m = None  # a mesh axis may appear only once in a spec
+        elif shape is not None and mesh is not None:
+            if shape[i] % _axis_size(mesh, m) != 0:
+                m = None
+        if m is not None:
+            used.update(key)
+            out.append(tuple(m) if isinstance(m, (tuple, list)) else m)
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def shard_act(x, logical_axes: Sequence):
+    """with_sharding_constraint against the active rules (no-op w/o mesh)."""
+    if _CTX.mesh is None or _CTX.mesh.empty:
+        return x
+    spec = spec_for(logical_axes, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def make_sharding(logical_axes: Sequence, shape: Optional[Tuple[int, ...]] = None,
+                  mesh: Optional[Mesh] = None) -> NamedSharding:
+    mesh = mesh or _CTX.mesh
+    return NamedSharding(mesh, spec_for(logical_axes, shape=shape, mesh=mesh))
+
+
+def param_shardings(axes_tree, shapes_tree, mesh: Mesh,
+                    rules: Optional[Dict] = None):
+    """NamedSharding tree for a parameter tree.
+
+    axes_tree: tree of logical-axes tuples (from param.axes()).
+    shapes_tree: matching tree of shapes (or ShapeDtypeStructs).
+    """
+    rules = rules or _CTX.rules or default_rules(mesh.axis_names)
+
+    def one(axes, shaped):
+        shape = getattr(shaped, "shape", shaped)
+        return NamedSharding(mesh, spec_for(axes, shape=shape, mesh=mesh,
+                                            rules=rules))
+
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))

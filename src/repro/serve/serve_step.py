@@ -1,0 +1,70 @@
+"""Serving steps: batched prefill + single-token decode (greedy / sampled).
+
+``decode_*`` / ``long_*`` dry-run cells lower ``serve_step`` — one new
+token against a KV cache of ``seq_len`` — exactly as assigned.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model_zoo
+
+
+def make_prefill_step(cfg: ArchConfig, *, tp: int = 1, cache_len: int = 0):
+    def prefill_step(params, batch):
+        logits, caches = model_zoo.prefill(
+            cfg, params, batch, cache_len or batch_len(batch), tp=tp)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1, keepdims=False)
+        return next_tok, caches
+
+    return prefill_step
+
+
+def batch_len(batch: Dict) -> int:
+    x = batch.get("tokens", batch.get("embeds", batch.get("dec_tokens")))
+    return x.shape[1]
+
+
+def make_serve_step(cfg: ArchConfig, *, tp: int = 1,
+                    temperature: float = 0.0):
+    """serve_step(params, token, caches, position[, key]) ->
+    (next_token, new_caches)."""
+
+    def serve_step(params, token, caches, position, key=None):
+        logits, new_caches = model_zoo.decode_step(
+            cfg, params, token, caches, position, tp=tp)
+        logits = logits[:, 0].astype(jnp.float32)
+        if temperature > 0.0 and key is not None:
+            next_tok = jax.random.categorical(key, logits / temperature)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok[:, None].astype(jnp.int32), new_caches
+
+    return serve_step
+
+
+def generate(cfg: ArchConfig, params, prompt: jnp.ndarray, n_new: int,
+             *, tp: int = 1, cache_len: Optional[int] = None,
+             temperature: float = 0.0, key=None):
+    """Greedy/sampled generation loop (prefill + lax.scan decode)."""
+    B, P = prompt.shape
+    L = cache_len or (P + n_new)
+    logits, caches = model_zoo.prefill(cfg, params, {"tokens": prompt},
+                                       cache_len=L, tp=tp)
+    first = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)[:, None]
+    step = make_serve_step(cfg, tp=tp, temperature=temperature)
+
+    def body(carry, t):
+        tok, caches, k = carry
+        k, sub = (jax.random.split(k) if k is not None else (None, None))
+        nxt, caches = step(params, tok, caches, P + t, sub)
+        return (nxt, caches, k), tok
+
+    (last, _, _), toks = jax.lax.scan(
+        body, (first.astype(jnp.int32), caches, key), jnp.arange(n_new))
+    out = jnp.moveaxis(toks[..., 0], 0, 1)  # (B, n_new)
+    return jnp.concatenate([out, last], axis=1)[:, :n_new + 1]

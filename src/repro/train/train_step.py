@@ -1,0 +1,82 @@
+"""Train-step factory: loss, grads, optimizer update, microbatching.
+
+``make_train_step`` builds the jitted SPMD step; gradient accumulation
+over micro-batches happens *inside* the step via ``lax.scan`` so the
+paper's work-shared micro-batch counts (train.trainer) stay outside the
+compiled graph.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model_zoo
+from repro.optim.optimizer import OptConfig, apply_updates
+from repro.parallel.sharding import shard_act
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean CE in fp32. logits: (B, T, V); labels: (B, T) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, batch: Dict, cfg: ArchConfig, *, tp: int = 1):
+    logits, aux = model_zoo.forward(cfg, params, batch, tp=tp)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptConfig, *, tp: int = 1,
+                    accum: int = 1, grad_reduce_dtype: Optional[str] = None):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics).  With accum > 1 the leading batch dim
+    is split into ``accum`` micro-batches scanned sequentially."""
+    rdt = grad_reduce_dtype or cfg.parallel.grad_reduce_dtype
+
+    def grads_of(params, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg, tp=tp)
+        return loss, parts, grads
+
+    def train_step(params, opt_state, batch, step):
+        if accum == 1:
+            loss, parts, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                loss_a, ce_a, grads_a = acc
+                loss, parts, grads = grads_of(params, mb)
+                # accumulate in the (possibly compressed) reduce dtype
+                grads = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), grads_a, grads)
+                return (loss_a + loss, ce_a + parts["ce"], grads), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.dtype(rdt)), params)
+            (loss, ce, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32), zero), micro)
+            loss = loss / accum
+            parts = {"ce": ce / accum, "aux": loss * 0}
+            grads = jax.tree.map(lambda g: (g / accum), grads)
+        new_params, new_opt, om = apply_updates(
+            opt_cfg, params, grads, opt_state, step)
+        metrics = {"loss": loss, **parts, **om}
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,192 @@
+"""Trainer: the paper's hybrid orchestration applied to LM training.
+
+Per global step of ``accum_units`` micro-batches:
+  1. plan work shares across device groups proportional to EWMA
+     throughput (paper §5.4.3 generalized);
+  2. each group computes gradients over its micro-batch share
+     (work sharing; a straggler automatically gets fewer units after
+     re-planning — straggler mitigation);
+  3. gradients are weighted-averaged and one optimizer update applied;
+  4. host tasks (data prefetch, async checkpoint) overlap device compute
+     (task parallelism, Fig 2(b));
+  5. failures kill a group -> elastic re-plan; revives re-join.
+
+Work units are micro-batches, so SPMD shapes stay uniform — this is the
+DESIGN.md §4.1 adaptation of unequal row splits.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ArchConfig
+from repro.core import work_sharing
+from repro.core.calibration import ThroughputTracker
+from repro.core.hybrid_executor import DeviceGroup, detect_platform
+from repro.data.pipeline import DataConfig, TokenStream, global_batch_indices
+from repro.ft.failure import FailureInjector
+from repro.models import model_zoo, param as param_mod
+from repro.optim.optimizer import OptConfig, apply_updates, init_opt_state
+from repro.train.train_step import loss_fn
+
+
+@dataclass
+class TrainerConfig:
+    accum_units: int = 4             # micro-batches per global step
+    steps: int = 20
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 10
+    replan_every: int = 1
+    log_every: int = 1
+    simulated_ratio: float = 4.0     # heterogeneity when simulating groups
+    # Deterministic timing model (group_name, units) -> seconds.  When
+    # set, it replaces wall-clock measurement — used to simulate
+    # heterogeneity/stragglers reproducibly on a single-device host.
+    time_model: Optional[Callable[[str, int], float]] = None
+
+
+@dataclass
+class StepRecord:
+    step: int
+    loss: float
+    units: List[int]
+    group_times: List[float]
+    hybrid_time: float
+    idle_fracs: List[float]
+    replanned: bool
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, opt_cfg: OptConfig,
+                 data_cfg: DataConfig, tcfg: TrainerConfig,
+                 groups: Optional[List[DeviceGroup]] = None,
+                 injector: Optional[FailureInjector] = None):
+        self.cfg, self.opt_cfg, self.data_cfg, self.tcfg = (
+            cfg, opt_cfg, data_cfg, tcfg)
+        if groups is None:
+            groups, _ = detect_platform(tcfg.simulated_ratio)
+        self.groups = groups
+        self.tracker = ThroughputTracker([g.name for g in groups])
+        self.injector = injector or FailureInjector()
+        self.stream = TokenStream(data_cfg)
+        self.ckpt = (Checkpointer(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
+        self.history: List[StepRecord] = []
+
+        self._grad_fn = jax.jit(jax.value_and_grad(
+            lambda p, b: loss_fn(p, b, cfg)[0]))
+        self._update = jax.jit(
+            lambda p, g, s, step: apply_updates(opt_cfg, p, g, s, step))
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        ptree = model_zoo.init(self.cfg, jax.random.key(seed))
+        params = param_mod.values(ptree)
+        opt = init_opt_state(self.opt_cfg, params)
+        return {"params": params, "opt": opt,
+                "step": jnp.zeros((), jnp.int32)}
+
+    def maybe_restore(self, state):
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return state, 0
+        state, step = self.ckpt.restore(state)
+        return state, int(step) + 1
+
+    # ------------------------------------------------------------------
+    def _group_grads(self, params, indices) -> tuple:
+        """Run one group's micro-batches; returns (grads_sum, loss_sum)."""
+        grads = None
+        loss_sum = 0.0
+        for i in indices:
+            b = self.stream.batch(i)
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            loss, g = self._grad_fn(params, batch)
+            loss_sum += float(loss)
+            grads = g if grads is None else jax.tree.map(
+                lambda a, x: a + x, grads, g)
+        jax.block_until_ready(grads)
+        return grads, loss_sum
+
+    def run(self, state=None, start_step: int = 0) -> Dict:
+        tcfg = self.tcfg
+        if state is None:
+            state = self.init_state()
+            state, start_step = self.maybe_restore(state)
+        params, opt = state["params"], state["opt"]
+        # warm up the jitted grad fn so compile time never poisons the
+        # throughput calibration (paper §4.5 measures steady state)
+        wb = {k: jnp.asarray(v)
+              for k, v in self.stream.batch(1 << 30).items()}
+        jax.block_until_ready(self._grad_fn(params, wb)[0])
+        units = work_sharing.integer_shares(
+            tcfg.accum_units,
+            self.tracker.throughputs([g.name for g in self.groups]))
+        self.tracker.mark_planned()
+
+        for step in range(start_step, tcfg.steps):
+            kill, revive = self.injector.at_step(step)
+            replanned = False
+            if kill:
+                self.tracker.mark_dead(kill)
+            if revive:
+                self.tracker.mark_alive(revive)
+            if (kill or revive or
+                    (step % tcfg.replan_every == 0
+                     and self.tracker.should_replan())):
+                units = work_sharing.integer_shares(
+                    tcfg.accum_units,
+                    self.tracker.throughputs(
+                        [g.name for g in self.groups]))
+                self.tracker.mark_planned()
+                replanned = True
+
+            # ---- work-shared gradient computation ----
+            grads_total, loss_total = None, 0.0
+            times = []
+            offset = 0
+            for g, k in zip(self.groups, units):
+                if k == 0:
+                    times.append(0.0)
+                    continue
+                idx = global_batch_indices(step, tcfg.accum_units, offset, k)
+                t0 = time.perf_counter()
+                grads, loss_sum = self._group_grads(params, idx)
+                if tcfg.time_model is not None:
+                    dt = tcfg.time_model(g.name, k)
+                else:
+                    dt = (time.perf_counter() - t0) * g.slowdown
+                times.append(dt)
+                self.tracker.update(g.name, k, dt)
+                loss_total += loss_sum
+                grads_total = grads if grads_total is None else jax.tree.map(
+                    lambda a, x: a + x, grads_total, grads)
+                offset += k
+            n_units = sum(units)
+            grads_total = jax.tree.map(lambda x: x / n_units, grads_total)
+            params, opt, om = self._update(params, grads_total, opt,
+                                           jnp.int32(step))
+
+            hybrid_time = max(times) if times else 0.0
+            idle = [(hybrid_time - t) / hybrid_time if hybrid_time else 0.0
+                    for t in times]
+            rec = StepRecord(step, loss_total / max(n_units, 1), list(units),
+                             times, hybrid_time, idle, replanned)
+            self.history.append(rec)
+            if step % tcfg.log_every == 0:
+                print(f"[train] step={step} loss={rec.loss:.4f} "
+                      f"units={units} idle="
+                      f"{['%.0f%%' % (100 * i) for i in idle]}"
+                      + (" REPLANNED" if replanned else ""), flush=True)
+
+            if self.ckpt and (step + 1) % tcfg.ckpt_every == 0:
+                self.ckpt.save(step, {"params": params, "opt": opt,
+                                      "step": jnp.int32(step)})
+        if self.ckpt:
+            self.ckpt.wait()
+        return {"params": params, "opt": opt, "history": self.history}

@@ -1,0 +1,10 @@
+"""The paper's 13 workloads, each with single-device and hybrid variants.
+
+Every module exposes ``run_hybrid(executor, size, **kw) -> HybridResult``
+plus the pure compute functions.  Work sharing / task parallelism
+follows Table 1's per-workload solution methodology.
+"""
+
+ALL_WORKLOADS = ["sort", "hist", "spmv", "spgemm", "raycast", "bilateral",
+                 "conv", "montecarlo", "listrank", "concomp", "lbm",
+                 "dither", "bundle"]

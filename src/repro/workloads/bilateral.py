@@ -1,0 +1,81 @@
+"""Bilat workload (paper §4.6): task parallel (host LUTs) + work sharing.
+
+The host precomputes the spatial/range LUTs (the paper's transcendental
+trick) while the accelerator is still busy; rows are then work-shared.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.host_offload import HostTaskPool, bilateral_luts
+from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
+from repro.kernels.bilateral.bilateral import bilateral_pallas
+from repro.kernels.bilateral.ref import bilateral_ref
+from repro.kernels.common import default_interpret
+
+
+def make_inputs(size: int = 512, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        (rng.random((size, size)) * 255).astype(np.float32))
+
+
+def run_hybrid(ex: HybridExecutor, size: int = 512, sigma_s: float = 3.0,
+               sigma_r: float = 30.0, radius: int = 7) -> WorkSharedOutput:
+    img = make_inputs(size)
+    H = img.shape[0]
+    K = 2 * radius + 1
+
+    # --- task parallelism: LUTs on the host, overlapped ---
+    pool = HostTaskPool()
+    fut = pool.submit("luts", bilateral_luts, sigma_s, sigma_r, radius)
+    sp, rl = fut.result()
+    sp, rl = jnp.asarray(sp), jnp.asarray(rl)
+
+    # comparable measured paths (kernel-in-interpret would distort the
+    # timing model off-TPU; the kernel is validated in tests)
+    use_k = jax.default_backend() == "tpu"
+
+    @jax.jit
+    def _lut_filter(block):
+        """Jitted LUT-based filter — the accel measured path."""
+        K_ = 2 * radius + 1
+        Hb, Wb = block.shape
+        padded = jnp.pad(block, radius, mode="edge")
+        num = jnp.zeros_like(block)
+        den = jnp.zeros_like(block)
+        for di in range(K_):
+            for dj in range(K_):
+                nb = padded[di:di + Hb, dj:dj + Wb]
+                q = jnp.clip(jnp.abs(nb - block).astype(jnp.int32), 0,
+                             rl.shape[0] - 1)
+                wgt = sp[di, dj] * jnp.take(rl, q)
+                num += wgt * nb
+                den += wgt
+        return num / jnp.maximum(den, 1e-12)
+
+    def run_share(group, start, n):
+        lo = max(0, start - radius)
+        hi = min(H, start + n + radius)
+        block = img[lo:hi]
+        if group == "accel" and use_k:
+            out = bilateral_pallas(block, sp, rl,
+                                   interpret=default_interpret())
+        else:
+            # both measured paths use the jitted LUT filter; group
+            # heterogeneity is modeled by the slowdown factor
+            out = _lut_filter(block)
+        out = out[start - lo:start - lo + n]
+        out.block_until_ready()
+        return out
+
+    ex.calibrate(lambda g, n: run_share(g, 0, n), probe_units=max(H // 8, 1))
+    comm = (sp.size + rl.size) * 4 / 6e9      # LUT shipping
+    out = ex.run_work_shared(
+        "Bilat", H, run_share,
+        combine=lambda outs: jnp.concatenate(outs, axis=0),
+        comm_cost=comm)
+    pool.shutdown()
+    return out

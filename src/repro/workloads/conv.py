@@ -1,0 +1,58 @@
+"""Conv workload (paper §4.6): regular, compute-bound, work-shared rows.
+
+The paper starts from a ~25% CPU share (the 3x GPU:CPU ratio of Lee et
+al.) and tunes empirically; Fig. 4 shows an 18% split on a 3600x3600
+image with a 15x15 filter.  Here the split comes from calibrated
+throughput and the halo rows are the only communication (K-1 rows).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
+from repro.kernels.conv2d.ops import conv2d
+
+
+def make_inputs(size: int = 512, ksize: int = 15, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.standard_normal((size, size)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((ksize, ksize)).astype(np.float32))
+    return img, w
+
+
+def conv_rows(img, w, start: int, n: int, use_kernel: bool = True):
+    """Convolve rows [start, start+n) with halo (the share kernel)."""
+    K = w.shape[0]
+    r = K // 2
+    lo = max(0, start - r)
+    hi = min(img.shape[0], start + n + r)
+    block = img[lo:hi]
+    out = conv2d(block, w, use_kernel=use_kernel)
+    return out[start - lo:start - lo + n]
+
+
+def run_hybrid(ex: HybridExecutor, size: int = 512, ksize: int = 15
+               ) -> WorkSharedOutput:
+    img, w = make_inputs(size, ksize)
+    H = img.shape[0]
+    # Timing paths must be comparable: off-TPU the Pallas kernel runs in
+    # interpret mode (Python), which would distort the hybrid timing
+    # model, so the measured path is the jitted XLA conv on both groups
+    # (the kernel itself is allclose-validated in tests and used when
+    # backend == 'tpu').
+    use_k = jax.default_backend() == "tpu"
+
+    def run_share(group, start, n):
+        out = conv_rows(img, w, start, n,
+                        use_kernel=(use_k and group == "accel"))
+        out.block_until_ready()
+        return out
+
+    ex.calibrate(lambda g, n: run_share(g, 0, n), probe_units=max(H // 8, 1))
+    comm = (ksize - 1) * size * 4 / 6e9       # halo rows over the link
+    return ex.run_work_shared(
+        "Conv", H, run_share,
+        combine=lambda outs: jnp.concatenate(outs, axis=0),
+        comm_cost=comm)

@@ -1,0 +1,44 @@
+"""Hist workload (paper §4.2): memory-bound, atomics, work-shared.
+
+Data is split between the groups, each computes a partial histogram
+(tiled/one-hot on the accelerator, bincount on the host path), partials
+merge bin-by-bin — the paper's §4.2 verbatim.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
+from repro.kernels.hist.ops import histogram
+from repro.kernels.hist.ref import hist_ref
+
+
+def make_inputs(n: int = 1 << 20, n_bins: int = 256, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, n_bins, n, dtype=np.int32))
+
+
+def run_hybrid(ex: HybridExecutor, n: int = 1 << 20, n_bins: int = 256,
+               unit: int = 0) -> WorkSharedOutput:
+    x = make_inputs(n, n_bins)
+    unit = unit or max(n // 64, 1)
+    units = n // unit
+    use_k = __import__("jax").default_backend() == "tpu"
+
+    def run_share(group, start, k):
+        if k <= 0:
+            return jnp.zeros((n_bins,), jnp.int32)
+        chunk = x[start * unit:(start + k) * unit]
+        out = histogram(chunk, n_bins,
+                        use_kernel=(use_k and group == "accel"))
+        out.block_until_ready()
+        return out
+
+    ex.calibrate(lambda g, k: run_share(g, 0, k),
+                 probe_units=max(units // 8, 1))
+    comm = n_bins * 4 / 6e9
+    return ex.run_work_shared(
+        "hist", units, run_share,
+        combine=lambda outs: sum(outs),      # bin-by-bin merge
+        comm_cost=comm)

@@ -1,0 +1,61 @@
+"""Monte Carlo workload (paper §4.7): photon-migration-style estimator.
+
+Task parallelism exactly as the paper: the host generates the
+pseudorandom stream (core.host_offload.host_prng_stream) while the
+accelerator consumes it in the simulation; photon counts are the
+work-share unit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.host_offload import HostTaskPool, host_prng_stream
+from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
+
+N_STEPS = 32
+MU_A, MU_S = 0.1, 0.9                 # absorption / scattering
+
+
+def simulate_photons(u: jnp.ndarray) -> jnp.ndarray:
+    """u: (N, N_STEPS) uniform randoms -> mean absorbed weight.
+
+    Each photon loses MU_A/(MU_A+MU_S) of its weight per interaction and
+    terminates below a threshold (Russian roulette with supplied u)."""
+    def body(k, carry):
+        w, absorbed = carry
+        dw = w * (MU_A / (MU_A + MU_S))
+        absorbed = absorbed + dw
+        w = w - dw
+        survive = u[:, k] < 0.9
+        w = jnp.where(survive | (w > 1e-4), w, 0.0)
+        return w, absorbed
+
+    w0 = jnp.ones(u.shape[0], jnp.float32)
+    _, absorbed = jax.lax.fori_loop(0, N_STEPS, body,
+                                    (w0, jnp.zeros_like(w0)))
+    return jnp.mean(absorbed)
+
+
+def run_hybrid(ex: HybridExecutor, n_photons: int = 1 << 18,
+               unit: int = 1 << 12) -> WorkSharedOutput:
+    units = n_photons // unit
+    pool = HostTaskPool()
+    # host PRNG stream generated as an overlapped task (paper §4.7)
+    fut = pool.submit("prng", host_prng_stream, 42, n_photons * N_STEPS)
+    u_all = jnp.asarray(fut.result()).reshape(n_photons, N_STEPS)
+
+    def run_share(group, start, k):
+        chunk = u_all[start * unit:(start + k) * unit]
+        out = simulate_photons(chunk)
+        out.block_until_ready()
+        return np.asarray(out) * (k * unit)
+
+    ex.calibrate(lambda g, k: run_share(g, 0, k), probe_units=units // 8)
+    out = ex.run_work_shared(
+        "MC", units, run_share,
+        combine=lambda outs: float(sum(outs)) / n_photons,
+        comm_cost=n_photons * N_STEPS * 4 / 6e9)
+    pool.shutdown()
+    return out

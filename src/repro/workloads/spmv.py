@@ -1,0 +1,103 @@
+"""spmv workload (paper §4.3): the flagship work-sharing-by-suitability.
+
+Rows are sorted by nnz; *dense* rows go to the accelerator (ELL kernel),
+the *sparse tail* goes to the host path (COO segment-sum).  The split
+threshold is exactly the work-share knob; the x vector is kept on both
+devices (paper: "the entire x vector is kept at both the CPU and GPU").
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
+from repro.kernels.spmv import ops as spmv_ops
+from repro.kernels.spmv.ref import spmv_coo_ref
+
+
+def make_matrix(n: int = 2048, density: float = 0.01, seed: int = 0,
+                skew: float = 4.0):
+    """Power-law row densities (like the paper's [49] suite)."""
+    rng = np.random.default_rng(seed)
+    base = rng.random((n, n)) < density
+    heavy = rng.choice(n, max(n // 50, 1), replace=False)
+    base[heavy] |= rng.random((len(heavy), n)) < density * skew * 10
+    A = base.astype(np.float32) * rng.standard_normal((n, n)).astype(
+        np.float32)
+    return A
+
+
+def run_hybrid(ex: HybridExecutor, n: int = 2048, density: float = 0.01
+               ) -> WorkSharedOutput:
+    A = make_matrix(n, density)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(n)
+                    .astype(np.float32))
+    nnz = (A != 0).sum(1)
+    # paper: sort rows by nnz; DENSE prefix -> accelerator (group 0),
+    # sparse tail -> host (group 1)
+    order = np.argsort(-nnz)
+    A_sorted = A[order]
+    use_k = __import__("jax").default_backend() == "tpu"
+    # Work units are NONZEROS, not rows: per-row cost is wildly
+    # non-uniform after the density sort, per-nnz cost is uniform.
+    cum_nnz = np.concatenate([[0], np.cumsum(nnz[order])])
+    total_nnz = int(cum_nnz[-1])
+    unit = max(total_nnz // 256, 1)
+    total_units = total_nnz // unit
+
+    def rows_of(start_u, k_u):
+        lo = int(np.searchsorted(cum_nnz, start_u * unit, side="left"))
+        if start_u + k_u >= total_units:        # last share covers the rest
+            return min(lo, n - 1), n
+        hi = int(np.searchsorted(cum_nnz, (start_u + k_u) * unit,
+                                 side="left"))
+        return lo, max(hi, lo + 1)
+
+    # ELL/COO packing is the paper's amortized preprocessing ("spmv is
+    # used over multiple iterations") — cached, never in the timed path
+    _prep_cache = {}
+
+    def run_share(group, start_u, k_u):
+        lo, hi = rows_of(start_u, k_u)
+        key = (group, lo, hi)
+        if key not in _prep_cache:
+            block = A_sorted[lo:hi]
+            if group == "accel":
+                # dense rows -> ELL kernel, binned in row TILES so the
+                # power-law head doesn't set the padding width for the
+                # whole share (the paper's row binning, per 512 rows)
+                tiles = []
+                for t0 in range(0, block.shape[0], 512):
+                    sub = block[t0:t0 + 512]
+                    tiles.append(spmv_ops.prepare(
+                        sub, k_threshold=int(max((sub != 0).sum(1).max(),
+                                                 1))))
+                _prep_cache[key] = tiles
+            else:                               # sparse tail -> COO path
+                rr, cc = np.nonzero(block)
+                _prep_cache[key] = (
+                    jnp.asarray(rr.astype(np.int32)),
+                    jnp.asarray(cc.astype(np.int32)),
+                    jnp.asarray(block[rr, cc]))
+        if group == "accel":
+            parts = [spmv_ops.spmv(m_, x, use_kernel=use_k)
+                     for m_ in _prep_cache[key]]
+            y = jnp.concatenate(parts)
+        else:
+            rr, cc, vv = _prep_cache[key]
+            y = spmv_coo_ref(rr, cc, vv, x, hi - lo)
+        y.block_until_ready()
+        return (lo, hi, np.asarray(y))
+
+    ex.calibrate(lambda g, k: run_share(g, 0, k),
+                 probe_units=total_units // 8)
+
+    def combine(outs):
+        y = np.zeros(n, np.float32)
+        for lo, hi, part in outs:
+            y[order[lo:hi]] = part              # undo row permutation
+        return jnp.asarray(y)
+
+    comm = n * 4 / 6e9                          # y merge
+    return ex.run_work_shared("spmv", total_units, run_share, combine,
+                              comm_cost=comm)

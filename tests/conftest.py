@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run against the source tree; 1 CPU device (no fake-device flags
+# here — only launch/dryrun.py uses the 512-device override)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

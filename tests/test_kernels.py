@@ -1,0 +1,130 @@
+"""Per-kernel allclose vs pure-jnp oracle, swept over shapes/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+KEY = jax.random.key(0)
+
+
+# --------------------------------------------------------------- hist
+@pytest.mark.parametrize("n,bins,tile", [
+    (1000, 16, 256), (4096, 256, 2048), (5000, 100, 512), (257, 7, 128)])
+def test_hist(n, bins, tile):
+    from repro.kernels.hist.hist import hist_pallas
+    from repro.kernels.hist.ref import hist_ref
+    x = jax.random.randint(KEY, (n,), 0, bins)
+    out = hist_pallas(x, bins, tile=tile)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(hist_ref(x, bins)))
+
+
+# --------------------------------------------------------------- spmv
+@pytest.mark.parametrize("R,C,K,dtype", [
+    (100, 80, 8, jnp.float32), (256, 256, 16, jnp.float32),
+    (33, 100, 4, jnp.float32)])
+def test_spmv_ell(R, C, K, dtype):
+    from repro.kernels.spmv.ref import spmv_ell_ref
+    from repro.kernels.spmv.spmv import spmv_ell_pallas
+    ks = jax.random.split(KEY, 3)
+    vals = jax.random.normal(ks[0], (R, K), dtype)
+    idx = jax.random.randint(ks[1], (R, K), 0, C)
+    x = jax.random.normal(ks[2], (C,), dtype)
+    np.testing.assert_allclose(
+        np.asarray(spmv_ell_pallas(vals, idx, x, row_tile=64)),
+        np.asarray(spmv_ell_ref(vals, idx, x)), rtol=2e-5, atol=2e-5)
+
+
+def test_spmv_binned_end_to_end():
+    from repro.kernels.spmv import ops
+    rng = np.random.default_rng(0)
+    A = ((rng.random((200, 150)) < 0.05)
+         * rng.standard_normal((200, 150))).astype(np.float32)
+    A[3] = rng.standard_normal(150)          # dense row -> COO tail
+    m = ops.prepare(A, k_threshold=16)
+    x = jnp.asarray(rng.standard_normal(150).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(ops.spmv(m, x)),
+                               A @ np.asarray(x), rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------- flash attention
+@pytest.mark.parametrize("T,H,Kv,d,bq,bk,causal", [
+    (128, 4, 4, 32, 64, 64, True),
+    (256, 4, 2, 64, 64, 128, True),
+    (128, 8, 1, 32, 32, 32, False),
+])
+def test_flash_attention(T, H, Kv, d, bq, bk, causal):
+    from repro.kernels.flash_attention.ops import flash_attention
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, T, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (2, T, Kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (2, T, Kv, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    ref = flash_attention(q, k, v, causal=causal, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention.ops import flash_attention
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = flash_attention(q, k, v, use_kernel=False)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=0.05, atol=0.05)
+
+
+# --------------------------------------------------------------- conv
+@pytest.mark.parametrize("H,W,K,tile", [
+    (64, 48, 3, 32), (130, 96, 5, 32), (50, 64, 15, 25)])
+def test_conv2d(H, W, K, tile):
+    from repro.kernels.conv2d.conv2d import conv2d_pallas
+    from repro.kernels.conv2d.ref import conv2d_ref
+    img = jax.random.normal(KEY, (H, W), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (K, K), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(conv2d_pallas(img, w, row_tile=tile)),
+        np.asarray(conv2d_ref(img, w)), rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------- bilateral
+def test_bilateral_lut_matches_direct():
+    from repro.core.host_offload import bilateral_luts
+    from repro.kernels.bilateral.bilateral import bilateral_pallas
+    from repro.kernels.bilateral.ref import bilateral_ref
+    img = (jax.random.uniform(KEY, (64, 48)) * 255).astype(jnp.float32)
+    sp, rl = bilateral_luts(2.0, 25.0, 2)
+    out = bilateral_pallas(img, jnp.asarray(sp), jnp.asarray(rl),
+                           row_tile=16)
+    ref = bilateral_ref(img, 2.0, 25.0, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------------------------- sort
+@pytest.mark.parametrize("G,L", [(10, 16), (70, 64), (33, 256)])
+def test_sort_bitonic(G, L):
+    from repro.kernels.sort_bitonic.sort_bitonic import sort_rows_pallas
+    x = jax.random.normal(KEY, (G, L), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(sort_rows_pallas(x, row_tile=32)),
+        np.sort(np.asarray(x), axis=1))
+
+
+# ------------------------------------------------------------------ gmm
+@pytest.mark.parametrize("E,C,D,F,tc,tf,td", [
+    (4, 64, 32, 48, 32, 32, 16), (2, 100, 96, 80, 64, 64, 32),
+    (8, 128, 128, 128, 128, 128, 128)])
+def test_gmm(E, C, D, F, tc, tf, td):
+    from repro.kernels.gmm.gmm import gmm_pallas
+    from repro.kernels.gmm.ref import gmm_ref
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (E, C, D), jnp.float32)
+    w = jax.random.normal(ks[1], (E, D, F), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(gmm_pallas(x, w, tile_c=tc, tile_f=tf, tile_d=td)),
+        np.asarray(gmm_ref(x, w)), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,47 @@
+"""Optimizer unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.optimizer import (OptConfig, apply_updates,
+                                   clip_by_global_norm, global_norm,
+                                   init_opt_state, schedule)
+
+
+@pytest.mark.parametrize("kind", ["adamw", "adafactor"])
+def test_optimizer_descends_quadratic(kind):
+    cfg = OptConfig(kind=kind, lr=0.1, warmup_steps=1, total_steps=200,
+                    weight_decay=0.0)
+    params = {"w": jnp.array([[3.0, -2.0], [1.5, 4.0]])}
+    state = init_opt_state(cfg, params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for step in range(100):
+        g = jax.grad(loss)(params)
+        params, state, _ = apply_updates(cfg, params, g, state,
+                                         jnp.int32(step))
+    assert float(loss(params)) < 0.1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 10}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(1000), rel=1e-5)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_frac=0.1)
+    assert float(schedule(cfg, 0)) == pytest.approx(0.1)
+    assert float(schedule(cfg, 9)) == pytest.approx(1.0)
+    assert float(schedule(cfg, 99)) == pytest.approx(0.1, abs=0.02)
+
+
+def test_adafactor_memory_factored():
+    cfg = OptConfig(kind="adafactor")
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((64,))}
+    st = init_opt_state(cfg, params)
+    assert st["vr"]["w"].shape == (64,)
+    assert st["vc"]["w"].shape == (32,)
+    assert st["vr"]["b"].shape == (64,)

@@ -1,0 +1,80 @@
+"""Unit + property tests for the HEFT task scheduler (paper §5.4.4)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.task_graph import TaskGraph
+
+
+def _lr_graph():
+    g = TaskGraph()
+    g.add("prng", {"cpu": 0.5, "tpu": 2.0}, output_bytes=6e9)
+    g.add("fis", {"tpu": 0.6}, deps=["prng"])
+    g.add("rank", {"tpu": 1.0, "cpu": 8.0}, deps=["fis"])
+    g.add("expand", {"tpu": 0.4, "cpu": 1.5}, deps=["rank"])
+    return g
+
+
+def test_cycle_detection():
+    g = TaskGraph()
+    g.add("a", {"cpu": 1.0})
+    with pytest.raises(ValueError):
+        g.add("b", {"cpu": 1.0}, deps=["missing"])
+
+
+def test_right_task_right_processor():
+    s = _lr_graph().schedule({"cpu0": "cpu", "tpu0": "tpu"})
+    a = s.assignments
+    assert a["prng"].device == "cpu0"       # CPU wins PRNG
+    assert a["rank"].device == "tpu0"       # TPU wins ranking
+    assert s.makespan < 0.5 + 0.6 + 1.0 + 0.4 + 2.0  # beats any serial
+
+
+def test_dependencies_respected():
+    s = _lr_graph().schedule({"cpu0": "cpu", "tpu0": "tpu"})
+    a = s.assignments
+    assert a["fis"].start >= a["prng"].end  # comm >= 0
+    assert a["rank"].start >= a["fis"].end
+    assert a["expand"].start >= a["rank"].end
+
+
+def test_host_only_task():
+    g = TaskGraph()
+    g.add("solve", {"cpu": 1.0})            # no tpu entry
+    s = g.schedule({"cpu0": "cpu", "tpu0": "tpu"})
+    assert s.assignments["solve"].device == "cpu0"
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 12))
+@settings(max_examples=60, deadline=None)
+def test_random_dag_schedule_valid(seed, n):
+    import random
+    rng = random.Random(seed)
+    g = TaskGraph()
+    names = []
+    for i in range(n):
+        deps = [d for d in names if rng.random() < 0.3]
+        costs = {}
+        if rng.random() < 0.9:
+            costs["cpu"] = rng.uniform(0.1, 2.0)
+        if rng.random() < 0.9 or not costs:
+            costs["tpu"] = rng.uniform(0.1, 2.0)
+        g.add(f"t{i}", costs, deps=deps,
+              output_bytes=rng.uniform(0, 1e9))
+        names.append(f"t{i}")
+    s = g.schedule({"cpu0": "cpu", "tpu0": "tpu"})
+    # every task scheduled exactly once, after its deps
+    assert set(s.assignments) == set(names)
+    for name, a in s.assignments.items():
+        for d in g.tasks[name].deps:
+            assert a.start >= s.assignments[d].end - 1e-9
+    # no overlap on the same device
+    by_dev = {}
+    for a in s.assignments.values():
+        by_dev.setdefault(a.device, []).append((a.start, a.end))
+    for ivals in by_dev.values():
+        ivals.sort()
+        for (s0, e0), (s1, e1) in zip(ivals, ivals[1:]):
+            assert s1 >= e0 - 1e-9
+    # makespan consistency
+    assert s.makespan == pytest.approx(
+        max(a.end for a in s.assignments.values()))

@@ -1,0 +1,96 @@
+"""Trainer integration: work shares, straggler re-planning, failure
+injection + elastic recovery, checkpoint/restart."""
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig, ParallelConfig
+from repro.data.pipeline import DataConfig
+from repro.ft.failure import FailureInjector, HeartbeatMonitor
+from repro.optim.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+CFG = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                 head_dim=16, parallel=ParallelConfig(remat="none"))
+TM = lambda g, k: k * (0.001 if g == "accel" else 0.004)   # 4:1
+
+
+def _trainer(tmp, steps=6, accum=8, injector=None):
+    return Trainer(
+        CFG, OptConfig(lr=1e-3, warmup_steps=2, total_steps=50),
+        DataConfig(vocab_size=256, seq_len=32, micro_batch=2),
+        TrainerConfig(accum_units=accum, steps=steps, ckpt_dir=tmp,
+                      ckpt_every=2, time_model=TM),
+        injector=injector)
+
+
+def test_shares_converge_to_throughput_ratio():
+    with tempfile.TemporaryDirectory() as d:
+        t = _trainer(d, steps=5)
+        out = t.run()
+        # 4:1 ratio, 8 units -> [6, 2] after calibration settles
+        assert out["history"][-1].units == [6, 2]
+
+
+def test_failure_kill_and_elastic_revive():
+    with tempfile.TemporaryDirectory() as d:
+        inj = FailureInjector(kill={2: "host"}, revive={4: "host"})
+        t = _trainer(d, steps=6, injector=inj)
+        out = t.run()
+        h = {r.step: r for r in out["history"]}
+        assert h[2].units == [8, 0]          # dead group gets nothing
+        assert h[3].units == [8, 0]
+        assert h[4].units[1] > 0             # rejoined after revive
+        assert all(np.isfinite(r.loss) for r in out["history"])
+
+
+def test_checkpoint_restart_resumes():
+    with tempfile.TemporaryDirectory() as d:
+        t1 = _trainer(d, steps=4)
+        t1.run()
+        t2 = _trainer(d, steps=7)
+        out = t2.run()
+        assert out["history"][0].step == 4   # resumed, not restarted
+
+
+def test_checkpoint_atomic_and_gc():
+    from repro.checkpoint.checkpointer import Checkpointer
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2, async_save=False)
+        state = {"a": jnp.arange(4.0), "b": {"c": jnp.ones((2, 3))}}
+        for s in (1, 2, 3):
+            ck.save(s, state)
+        assert ck.latest_step() == 3
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(d)
+                       if n.startswith("step_"))
+        assert steps == [2, 3]               # GC kept last 2
+        restored, step = ck.restore(state)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.arange(4.0))
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    from repro.checkpoint.checkpointer import Checkpointer
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, async_save=False)
+        ck.save(0, {"a": jnp.ones((4,))})
+        with pytest.raises(ValueError):
+            ck.restore({"a": jnp.ones((5,))})
+
+
+def test_heartbeat_monitor():
+    clock = [0.0]
+    mon = HeartbeatMonitor(["a", "b"], timeout_s=10,
+                           clock=lambda: clock[0])
+    clock[0] = 5.0
+    mon.beat("a")
+    clock[0] = 12.0
+    dead = mon.check()
+    assert dead == {"b"}
+    mon.beat("b")
+    assert mon.check() == set()

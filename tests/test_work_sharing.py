@@ -1,0 +1,75 @@
+"""Unit + property tests for the work-sharing planner (paper §5.4.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import work_sharing as ws
+
+
+def test_paper_split_rule():
+    # §5.4.3: T_GPU=1, T_CPU=3 -> CPU share = 1/(1+3) = 25%
+    assert ws.paper_split(1.0, 3.0) == pytest.approx(0.25)
+    # symmetric devices -> even split
+    assert ws.paper_split(2.0, 2.0) == pytest.approx(0.5)
+
+
+def test_integer_shares_basic():
+    assert ws.integer_shares(100, [4.0, 1.0]) == [80, 20]
+    assert ws.integer_shares(10, [1.0, 0.0]) == [10, 0]
+    assert sum(ws.integer_shares(7, [1, 1, 1])) == 7
+
+
+@given(total=st.integers(1, 10_000),
+       thr=st.lists(st.floats(0.0, 100.0), min_size=1, max_size=8))
+@settings(max_examples=200, deadline=None)
+def test_integer_shares_properties(total, thr):
+    if sum(thr) <= 0:
+        with pytest.raises(ValueError):
+            ws.integer_shares(total, thr)
+        return
+    units = ws.integer_shares(total, thr)
+    # invariant 1: conservation
+    assert sum(units) == total
+    # invariant 2: zero-throughput groups get nothing
+    for u, t in zip(units, thr):
+        if t == 0:
+            assert u == 0
+    # invariant 3: proportionality within rounding
+    shares = ws.proportional_shares(thr)
+    for u, s in zip(units, shares):
+        assert abs(u - s * total) <= len(thr)
+
+
+@given(total=st.integers(1, 1000),
+       thr=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=4),
+       comm=st.floats(0.0, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_plan_work_metrics(total, thr, comm):
+    plan = ws.plan_work(total, thr, comm_cost=comm)
+    # hybrid span >= the perfectly balanced lower bound
+    lower = total / sum(thr)
+    assert plan.hybrid_time >= lower - 1e-9
+    # idle fractions in [0, 1]; efficiency in [0, 1]
+    assert all(-1e-9 <= i <= 1 + 1e-9 for i in plan.idle_fracs)
+    assert -1e-9 <= plan.resource_efficiency <= 1 + 1e-9
+    # with zero comm, hybrid never loses to the best single device by
+    # more than one work unit of the fastest group
+    if comm == 0.0:
+        assert plan.hybrid_time <= plan.best_single_time + 1 / max(thr)
+
+
+def test_plan_work_gain_positive_for_balanced_pair():
+    plan = ws.plan_work(1000, [4.0, 1.0])
+    # ideal: hybrid = 800/4 = 200 vs single = 250 -> gain 20%
+    assert plan.gain == pytest.approx(0.2, abs=0.01)
+    assert max(plan.idle_fracs) < 0.02
+
+
+def test_refine_split_converges():
+    total = 100
+    units = [50, 50]
+    true_thr = [4.0, 1.0]
+    for _ in range(5):
+        times = [u / t for u, t in zip(units, true_thr)]
+        units = ws.refine_split(total, times, units)
+    assert units == [80, 20]

@@ -19,7 +19,8 @@ def run(ratio: float = 3.9):
     for name, sweep in SWEEPS.items():
         mod = importlib.import_module(f"repro.workloads.{name}")
         for kw in sweep:
-            ex = HybridExecutor(simulated_ratio=ratio)
+            ex = HybridExecutor(simulated_ratio=ratio,
+                                force_simulated=True)
             out = mod.run_hybrid(ex, **kw)
             r = out.result
             size = list(kw.values())[0]

@@ -6,7 +6,8 @@ from repro.workloads import listrank
 
 
 def run(n: int = 1 << 18, ratio: float = 10.0):
-    ex = HybridExecutor(simulated_ratio=ratio)
+    ex = HybridExecutor(simulated_ratio=ratio,
+                        force_simulated=True)
     out = listrank.run_hybrid(ex, n=n)
     r = out.result
     print(f"fig5/LR,{r.hybrid_time * 1e6:.0f},gain={100 * r.gain:.1f}%|"

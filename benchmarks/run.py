@@ -1,36 +1,87 @@
 """Benchmark entry point — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows:
-  table2/*   — Table 2 (13 workloads x 2 platforms, gain/idle/eff)
+  table2/*   — Table 2 (13 workloads x 2 platforms, gain/idle/eff,
+               measured vs analytic-model makespan)
   fig3/*     — Fig. 3 scaling over input sizes
-  fig4/*     — Fig. 4 Conv overlap timeline
+  fig4/*     — Fig. 4 Conv overlap timeline (measured vs model)
   fig5/*     — Fig. 5 LR task assignment
-  split_sweep/* — §5.4.3 work-split threshold sweep
+  split_sweep/* — §5.4.3 work-split sweep, executed splits vs model
   kernels/*  — per-kernel microbenches
   roofline/* — §Roofline terms per (arch x shape), from dry-run+probe
+
+``--json`` additionally writes machine-readable results so the perf
+trajectory is tracked across PRs:
+  BENCH_kernels.json — kernels/* and roofline/* rows
+  BENCH_hybrid.json  — table2/fig3/fig4/fig5/split_sweep rows
 """
+import argparse
+import io
+import json
+import os
+import re
 import sys
+from contextlib import redirect_stdout
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_ROW = re.compile(r"^([A-Za-z0-9_./+-]+/[^,]*),([-\d.]+),(.*)$")
+
+
+def _capture(fn):
+    """Run a section, tee its stdout, return parsed CSV rows."""
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        fn()
+    text = buf.getvalue()
+    sys.stdout.write(text)
+    rows = []
+    for line in text.splitlines():
+        m = _ROW.match(line.strip())
+        if m:
+            rows.append({"name": m.group(1), "us": float(m.group(2)),
+                         "derived": m.group(3)})
+    return rows
 
 
 def main() -> None:
-    sys.path.insert(0, "src")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_kernels.json / BENCH_hybrid.json")
+    args = ap.parse_args()
+
+    for p in (_ROOT, os.path.join(_ROOT, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
     from benchmarks import (fig3_scaling, fig4_overlap, fig5_tasks,
                             kernels_bench, roofline, split_sweep,
                             table2_hybrid)
+    hybrid_rows, kernel_rows = [], []
     print("# === Table 2: hybrid gain / idle (13 workloads) ===")
-    table2_hybrid.run()
+    hybrid_rows += _capture(table2_hybrid.run)
     print("# === Fig 3: scaling ===")
-    fig3_scaling.run()
-    print("# === Fig 4: Conv overlap ===")
-    fig4_overlap.run()
+    hybrid_rows += _capture(fig3_scaling.run)
+    print("# === Fig 4: Conv overlap (measured vs model) ===")
+    hybrid_rows += _capture(fig4_overlap.run)
     print("# === Fig 5: LR tasks ===")
-    fig5_tasks.run()
-    print("# === 5.4.3: split sweep ===")
-    split_sweep.run()
+    hybrid_rows += _capture(fig5_tasks.run)
+    print("# === 5.4.3: split sweep (executed) ===")
+    hybrid_rows += _capture(split_sweep.run)
     print("# === kernels ===")
-    kernels_bench.run()
+    kernel_rows += _capture(kernels_bench.run)
     print("# === roofline (40 cells) ===")
-    roofline.run()
+    kernel_rows += _capture(roofline.run)
+
+    if args.json:
+        import jax
+        meta = {"backend": jax.default_backend(),
+                "n_devices": len(jax.devices())}
+        with open(os.path.join(_ROOT, "BENCH_kernels.json"), "w") as f:
+            json.dump({"meta": meta, "rows": kernel_rows}, f, indent=1)
+        with open(os.path.join(_ROOT, "BENCH_hybrid.json"), "w") as f:
+            json.dump({"meta": meta, "rows": hybrid_rows}, f, indent=1)
+        print(f"# wrote BENCH_kernels.json ({len(kernel_rows)} rows), "
+              f"BENCH_hybrid.json ({len(hybrid_rows)} rows)")
 
 
 if __name__ == '__main__':

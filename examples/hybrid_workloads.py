@@ -22,15 +22,26 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ratio", type=float, default=3.9,
                     help="simulated accel:host throughput ratio")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, choices=ALL_WORKLOADS,
+                    metavar="WORKLOAD")
+    ap.add_argument("--chunks", type=int, default=16,
+                    help="chunk-grid granularity per work-shared call")
+    ap.add_argument("--no-steal", action="store_true",
+                    help="disable work stealing")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="repeat each workload (steady-state timing: "
+                         "later runs hit the calibration cache)")
     args = ap.parse_args()
     results = []
     for name in ALL_WORKLOADS:
         if args.only and name != args.only:
             continue
         mod = importlib.import_module(f"repro.workloads.{name}")
-        ex = HybridExecutor(simulated_ratio=args.ratio)
-        out = mod.run_hybrid(ex, **QUICK.get(name, {}))
+        for _ in range(max(args.repeat, 1)):
+            ex = HybridExecutor(simulated_ratio=args.ratio,
+                                n_chunks=args.chunks,
+                                steal=not args.no_steal)
+            out = mod.run_hybrid(ex, **QUICK.get(name, {}))
         results.append(out.result)
         print(out.result.row(), flush=True)
     print("\n" + summarize(results))

@@ -1,6 +1,7 @@
 """Core hybrid-computing engine (the paper's contribution, generalized).
 
 - work_sharing:   throughput-proportional work splits (paper §5.4.3)
+- async_executor: chunk-pipelined concurrent execution + work stealing
 - task_graph:     HEFT task-parallel scheduling (paper §5.4.4)
 - calibration:    static + EWMA online throughput estimation (paper §4.5)
 - hybrid_executor: executes work-shared plans over JAX device groups
@@ -11,7 +12,12 @@ from repro.core.work_sharing import (WorkPlan, integer_shares, paper_split,
                                      plan_work, proportional_shares,
                                      refine_split)
 from repro.core.task_graph import Schedule, Task, TaskGraph
-from repro.core.calibration import ThroughputTracker
+from repro.core.calibration import (CalibrationCache, ThroughputTracker,
+                                    clear_calibration_cache,
+                                    get_calibration_cache)
+from repro.core.async_executor import (AsyncChunkExecutor, Chunk,
+                                       ChunkRecord, ExecutionTrace,
+                                       WorkStealingScheduler, make_chunks)
 from repro.core.hybrid_executor import (DeviceGroup, HybridExecutor,
                                         WorkSharedOutput, detect_platform)
 from repro.core.metrics import HybridResult, summarize

@@ -5,13 +5,21 @@ the CPU and the GPU individually" (§4.5).  At cluster scale that
 measurement must be continuous: per-group step times feed an EWMA which
 re-plans shares when drift exceeds a threshold — this is the straggler
 mitigation path used by train.trainer.
+
+Steady-state calls must not pay for calibration again: the process-wide
+``CalibrationCache`` remembers seconds/unit per (workload, group) key,
+so an executor created for a workload it has seen before skips the
+probe runs entirely and ``run_work_shared`` executes each chunk exactly
+once (no warmup, no min-of-N re-execution).
 """
 from __future__ import annotations
 
-import math
+import threading
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+_MIN_UNIT_TIME = 1e-9
 
 
 @dataclass
@@ -40,11 +48,18 @@ class ThroughputTracker:
             self.stats[g] = GroupStats(alive=alive)
         self._planned_thr = None
 
+    def seed(self, group: str, unit_time: float) -> None:
+        """Install a known seconds/unit (e.g. from the calibration
+        cache) as if it had been measured once."""
+        s = self.stats[group]
+        s.ewma_unit_time = max(unit_time, _MIN_UNIT_TIME)
+        s.n_obs = max(s.n_obs, 1)
+
     def update(self, group: str, units: int, elapsed: float) -> None:
         s = self.stats[group]
         if units <= 0:
             return
-        per_unit = elapsed / units
+        per_unit = max(elapsed / units, _MIN_UNIT_TIME)
         if s.n_obs == 0:
             s.ewma_unit_time = per_unit
         else:
@@ -93,13 +108,102 @@ class ThroughputTracker:
 
 def measure(fn: Callable[[], object], warmup: int = 1, iters: int = 3
             ) -> float:
-    """Wall-clock a blocking callable (used by workload calibration)."""
+    """Wall-clock a callable, forcing completion of whatever it returns.
+
+    JAX dispatch is asynchronous: without ``block_until_ready`` on the
+    *returned* value this would time the launch, not the execution, and
+    every work-sharing plan downstream would be skewed toward whichever
+    group launches fastest."""
+    import jax
+
     for _ in range(warmup):
-        fn()
+        jax.block_until_ready(fn())
     t0 = time.perf_counter()
     for _ in range(iters):
-        fn()
+        jax.block_until_ready(fn())
     return (time.perf_counter() - t0) / iters
+
+
+# ---------------------------------------------------------------------------
+# Persistent per-(workload, group) calibration
+# ---------------------------------------------------------------------------
+@dataclass
+class _CacheEntry:
+    unit_time: float                 # EWMA seconds per work unit
+    n_obs: int = 1
+
+
+class CalibrationCache:
+    """Process-wide seconds/unit memory, keyed by
+    (workload, group, slowdown).  The slowdown is part of the key so
+    simulated platforms with different throughput ratios (Hybrid-High
+    vs Hybrid-Low) never share entries."""
+
+    def __init__(self, alpha: float = 0.25):
+        self.alpha = alpha
+        self._store: Dict[Tuple[str, str, float], _CacheEntry] = {}
+        self._plans: Dict[str, Tuple[int, int, List[int]]] = {}
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def key(workload: str, group: str, slowdown: float = 1.0
+            ) -> Tuple[str, str, float]:
+        return (workload, group, round(float(slowdown), 6))
+
+    def get(self, workload: str, group: str, slowdown: float = 1.0
+            ) -> Optional[float]:
+        with self._lock:
+            e = self._store.get(self.key(workload, group, slowdown))
+            return e.unit_time if e else None
+
+    def put(self, workload: str, group: str, unit_time: float,
+            slowdown: float = 1.0) -> None:
+        unit_time = max(unit_time, _MIN_UNIT_TIME)
+        k = self.key(workload, group, slowdown)
+        with self._lock:
+            e = self._store.get(k)
+            if e is None:
+                self._store[k] = _CacheEntry(unit_time)
+            else:
+                e.unit_time = (self.alpha * unit_time
+                               + (1 - self.alpha) * e.unit_time)
+                e.n_obs += 1
+
+    def sticky_plan(self, workload: str, total_units: int,
+                    chunk_units: int, assigned: Sequence[int]
+                    ) -> List[int]:
+        """Damp plan drift: if the new chunk-rounded assignment moved by
+        at most one chunk per group since the last call, keep the old
+        assignment.  Chunk->group stability keeps data-dependent jit
+        shapes compiled; a real drift (straggler) still replans, and
+        work stealing absorbs the residual imbalance within the call."""
+        assigned = [int(a) for a in assigned]
+        with self._lock:
+            prev = self._plans.get(workload)
+            if (prev is not None and prev[0] == total_units
+                    and prev[1] == chunk_units
+                    and len(prev[2]) == len(assigned)
+                    and all(abs(a - b) <= chunk_units
+                            for a, b in zip(assigned, prev[2]))):
+                return list(prev[2])
+            self._plans[workload] = (total_units, chunk_units, assigned)
+            return assigned
+
+    def clear(self) -> None:
+        with self._lock:
+            self._store.clear()
+            self._plans.clear()
+
+
+_GLOBAL_CACHE = CalibrationCache()
+
+
+def get_calibration_cache() -> CalibrationCache:
+    return _GLOBAL_CACHE
+
+
+def clear_calibration_cache() -> None:
+    _GLOBAL_CACHE.clear()
 
 
 # ---------------------------------------------------------------------------

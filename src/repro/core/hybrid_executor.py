@@ -1,25 +1,50 @@
-"""Hybrid executor: run work-shared computations over JAX device groups.
+"""Hybrid executor: chunk-pipelined work sharing over JAX device groups.
 
-On a genuinely heterogeneous platform (``jax.devices()`` spanning more
-than one platform, or device groups with different measured throughput)
-the two groups dispatch asynchronously and overlap for real.  On this
-container (one CPU device) heterogeneity is *simulated*: the same device
-executes both shares and the slower group's time is scaled by a
-configurable slowdown factor; the hybrid makespan is then the paper's
-overlap model max(t_fast, t_slow) + comm.  Every result records which
-mode produced it (``simulated=True/False``).
+Execution model
+---------------
+A work-shared call is planned (throughput-proportional integer shares,
+paper §5.4.3), cut into uniform chunks, and handed to the
+``AsyncChunkExecutor``:
+
+* **Real overlap** — when the device groups own disjoint devices (two
+  JAX platforms, or one platform with ≥2 devices, e.g. under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=2``) each group
+  gets a worker thread pinned to its primary device and the groups
+  compute concurrently; the reported makespan is the real wall-clock
+  span of the joined threads.
+* **Simulated overlap** — on a single device the groups share the
+  hardware, so concurrency is simulated with per-group virtual clocks:
+  chunks interleave in virtual-time order, the slower group's chunk
+  times are scaled by its ``slowdown`` factor, and the makespan is the
+  paper's overlap model max(t_fast, t_slow) + comm.  Every result
+  records which mode produced it (``HybridResult.mode`` and
+  ``WorkSharedOutput.simulated``).
+
+Within one call a group that drains its chunk queue *steals* from the
+tail of the slowest group's queue, so a mis-calibrated split (or a
+mid-run straggler) self-corrects without waiting for the next call's
+``refine_split``.  Calibration is remembered process-wide per
+(workload, group, slowdown) in the ``CalibrationCache``: the first call
+for a workload probes once per group and warms compilation; every
+steady-state call after that executes each chunk exactly once.
+
+Both the measured makespan and the analytic model makespan
+(``WorkPlan.hybrid_time``) are reported side by side so the overlap
+benchmarks can show how far reality is from the model.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 
 from repro.core import work_sharing
-from repro.core.calibration import ThroughputTracker, measure
+from repro.core.async_executor import (AsyncChunkExecutor, ExecutionTrace,
+                                       make_chunks, make_share_chunks)
+from repro.core.calibration import (ThroughputTracker,
+                                    get_calibration_cache, measure)
 from repro.core.metrics import HybridResult
 
 
@@ -31,11 +56,28 @@ class DeviceGroup:
     slowdown: float = 1.0            # simulated relative slowdown (>=1)
 
 
-def detect_platform(simulated_ratio: float = 4.0) -> Tuple[List[DeviceGroup], bool]:
-    """Build device groups. If only one platform exists, simulate a
-    hybrid pair with the given throughput ratio (Hybrid-Low's GPU:CPU
-    sustained ratio 77.7/20 ≈ 3.9 is the default)."""
+def detect_platform(simulated_ratio: float = 4.0,
+                    force_simulated: bool = False
+                    ) -> Tuple[List[DeviceGroup], bool]:
+    """Build device groups.
+
+    Two platforms -> one group per platform (real heterogeneity).  One
+    platform with >=2 devices -> split the devices into two groups
+    (real concurrency, homogeneous hardware).  A single device ->
+    simulate a hybrid pair with the given throughput ratio (Hybrid-Low's
+    GPU:CPU sustained ratio 77.7/20 ~= 3.9 is the default).
+
+    ``force_simulated`` skips detection and always builds the simulated
+    pair on the primary device — benchmarks that sweep throughput
+    ratios (table2's Hybrid-High vs -Low) need the ratio honored even
+    on a multi-device host, where detection would otherwise return a
+    homogeneous real-concurrency pair and silently drop the ratio."""
     devs = jax.devices()
+    if force_simulated:
+        only = devs[:1]
+        return ([DeviceGroup("accel", only, "accel", slowdown=1.0),
+                 DeviceGroup("host", only, "host",
+                             slowdown=simulated_ratio)], True)
     platforms: Dict[str, List] = {}
     for d in devs:
         platforms.setdefault(d.platform, []).append(d)
@@ -44,10 +86,27 @@ def detect_platform(simulated_ratio: float = 4.0) -> Tuple[List[DeviceGroup], bo
         groups = [DeviceGroup("accel", platforms[names[0]], "accel"),
                   DeviceGroup("host", platforms[names[1]], "host")]
         return groups, False
+    if len(devs) >= 2:
+        half = max(len(devs) // 2, 1)
+        return ([DeviceGroup("accel", devs[:half], "accel"),
+                 DeviceGroup("host", devs[half:], "host")], False)
     only = devs[: max(1, len(devs))]
     return ([DeviceGroup("accel", only, "accel", slowdown=1.0),
              DeviceGroup("host", only, "host", slowdown=simulated_ratio)],
             True)
+
+
+def _assigned_units(units: Sequence[int], names: Sequence[str],
+                    chunk_units: int) -> List[int]:
+    """Units per group after rounding shares to whole chunks — what the
+    executor will actually run, which the analytic model must predict."""
+    active = [(n, k) for n, k in zip(names, units) if k > 0]
+    if not active:
+        return [0] * len(names)
+    queues = make_chunks([k for _, k in active], [n for n, _ in active],
+                         chunk_units)
+    per = {n: sum(c.units for c in q) for n, q in queues.items()}
+    return [per.get(n, 0) for n in names]
 
 
 @dataclass
@@ -56,40 +115,67 @@ class WorkSharedOutput:
     result: HybridResult
     plan: work_sharing.WorkPlan
     simulated: bool
+    trace: Optional[ExecutionTrace] = None
 
 
 class HybridExecutor:
     """Work-sharing executor over two (or more) device groups.
 
-    ``fn(group_name, chunk)`` must be a callable running one share and
-    returning its output (blocking until complete).
-    """
+    ``run_share(group_name, start_unit, n_units)`` must execute one
+    chunk and block until its output is ready (call
+    ``block_until_ready`` on device arrays before returning)."""
 
     def __init__(self, groups: Optional[List[DeviceGroup]] = None,
-                 simulated_ratio: float = 4.0):
+                 simulated_ratio: float = 4.0, n_chunks: int = 16,
+                 steal: bool = True,
+                 time_model: Optional[Callable[[str, int], float]] = None,
+                 force_simulated: bool = False):
         if groups is None:
-            groups, sim = detect_platform(simulated_ratio)
+            groups, sim = detect_platform(simulated_ratio, force_simulated)
             self.simulated = sim
         else:
             self.simulated = len({id(d) for g in groups
                                   for d in g.devices}) < len(
                 [d for g in groups for d in g.devices])
         self.groups = groups
+        self.n_chunks = max(int(n_chunks), 1)
         self.tracker = ThroughputTracker([g.name for g in groups])
+        self.cache = get_calibration_cache()
+        self.time_model = time_model
+        self._async = AsyncChunkExecutor(groups, steal=steal,
+                                         time_model=time_model)
+        self._cache_key: Optional[str] = None
+        self._warm = False
 
     # ------------------------------------------------------------------
     def calibrate(self, fn: Callable[[str, int], object], probe_units: int,
-                  iters: int = 2) -> None:
-        """Measure per-group throughput on a probe share (paper §4.5).
-        Resets any previous calibration: each workload (or phase) has
-        its own per-unit cost profile."""
+                  workload: Optional[str] = None, iters: int = 1) -> None:
+        """Seed per-group throughput for a workload (paper §4.5).
+
+        On a cache hit for every group the probe runs are skipped
+        entirely — the cached seconds/unit are installed and the next
+        ``run_work_shared`` call executes each chunk exactly once.  On
+        a miss each group runs the probe ``1 + iters`` times (one
+        warmup so jit compilation never distorts the measurement)."""
         self.tracker.reset()
+        self._cache_key = workload
         probe_units = max(int(probe_units), 1)
+        warm = True
         for g in self.groups:
+            cached = (self.cache.get(workload, g.name, g.slowdown)
+                      if workload else None)
+            if cached is not None:
+                self.tracker.seed(g.name, cached)
+                continue
+            warm = False
             t = measure(lambda: fn(g.name, probe_units), warmup=1,
                         iters=iters)
             t *= g.slowdown
             self.tracker.update(g.name, probe_units, t)
+            if workload:
+                self.cache.put(workload, g.name, t / probe_units,
+                               g.slowdown)
+        self._warm = warm
         self.tracker.mark_planned()
 
     def plan(self, total_units: int, comm_cost: float = 0.0,
@@ -98,59 +184,157 @@ class HybridExecutor:
         return work_sharing.plan_work(total_units, thr, comm_cost, post_cost)
 
     # ------------------------------------------------------------------
+    def _mode(self) -> str:
+        if self.time_model is not None or self.simulated:
+            return "virtual"
+        return "threads"
+
     def run_work_shared(self, workload: str, total_units: int,
                         run_share: Callable[[str, int, int], object],
                         combine: Callable[[Sequence[object]], object],
                         comm_cost: float = 0.0, post_cost: float = 0.0,
-                        warmup: bool = True) -> WorkSharedOutput:
-        """Execute one work-shared computation.
+                        warmup: Optional[bool] = None,
+                        plan_override: Optional[Sequence[int]] = None,
+                        sequential: bool = False,
+                        steal: Optional[bool] = None,
+                        whole_shares: bool = False) -> WorkSharedOutput:
+        """Execute one work-shared computation, chunk-pipelined.
 
         run_share(group_name, start_unit, n_units) -> share output
-        combine(outputs) -> final value
-        warmup: run each share once untimed first so jit compilation
-        never distorts the steady-state timing (paper: "average over
-        multiple runs").
-        """
+        combine(outputs) -> final value (outputs arrive in unit order)
+        warmup: force (True) or suppress (False) the one untimed
+        warmup chunk per group; default None warms only when the
+        calibration cache was cold for this workload.
+        plan_override: force this exact unit split (benchmark sweeps);
+        also disables stealing so the forced split is honored.
+        sequential: run the no-overlap baseline loop instead (each
+        chunk still executes exactly once).
+        steal: per-call work-stealing override — suitability-split
+        workloads (spmv's dense-head/sparse-tail) pass False because a
+        cross-path steal recompiles data-dependent shapes mid-run.
+        whole_shares: execute each group's share as ONE chunk (implies
+        no stealing) — for suitability splits whose per-chunk shapes
+        are data-dependent, where a uniform chunk grid would make
+        every chunk a fresh jit compile + packing in the timed path."""
+        cache_key = self._cache_key or workload
         plan = self.plan(total_units, comm_cost, post_cost)
-        outputs, times = [], []
-        start = 0
-        for g, k in zip(self.groups, plan.units):
-            if k == 0:
-                outputs.append(None)
-                times.append(0.0)
-                continue
-            if warmup:
-                run_share(g.name, start, k)
-            # min-of-2: the slowdown factor multiplies measurement noise,
-            # so single-shot timing is too jittery at high ratios
-            best = None
-            for _ in range(2):
-                t0 = time.perf_counter()
-                out = run_share(g.name, start, k)
-                dt_raw = time.perf_counter() - t0
-                if best is None or dt_raw < best[0]:
-                    best = (dt_raw, out)
-            dt = best[0] * g.slowdown
-            outputs.append(best[1])
-            times.append(dt)
-            self.tracker.update(g.name, k, dt)
-            start += k
-        live = [o for o in outputs if o is not None]
-        if warmup:
-            combine(live)                    # warm merge-path compiles too
+        chunk_units = max(total_units // self.n_chunks, 1)
+        if plan_override is not None:
+            units = list(plan_override)
+        else:
+            # chunk-rounded shares, damped against call-to-call drift so
+            # chunk->group assignment (and jit shapes) stay stable
+            names = [g.name for g in self.groups]
+            # plans are per platform: the same workload on a different
+            # slowdown profile (Hybrid-High vs -Low) must not reuse or
+            # damp against this platform's chunk assignment
+            plan_key = cache_key + "|" + ",".join(
+                f"{g.name}:{g.slowdown:g}" for g in self.groups)
+            assigned0 = ([int(u) for u in plan.units] if whole_shares
+                         else _assigned_units(plan.units, names,
+                                              chunk_units))
+            units = self.cache.sticky_plan(
+                plan_key, total_units, chunk_units, assigned0)
+        do_warmup = (not self._warm) if warmup is None else warmup
+
+        if do_warmup:
+            # warm the chunk shapes each group will actually execute:
+            # one representative per (units, at-lo-boundary,
+            # at-hi-boundary) signature of its own queue — boundary
+            # chunks see halo-clamped shapes, the grid tail may be a
+            # short chunk, and suitability-split groups (spmv) must not
+            # be warmed on ranges the other path owns
+            names = [g.name for g in self.groups]
+            active = [(n_, k) for n_, k in zip(names, units) if k > 0]
+            total_assigned = sum(k for _, k in active)
+            if whole_shares:
+                queues = make_share_chunks([k for _, k in active],
+                                           [n_ for n_, _ in active])
+            else:
+                queues = make_chunks([k for _, k in active],
+                                     [n_ for n_, _ in active], chunk_units)
+            for name, q in queues.items():
+                seen = set()
+                for c in q:
+                    sig = (c.units, c.start == 0,
+                           c.start + c.units == total_assigned)
+                    if sig not in seen:
+                        seen.add(sig)
+                        jax.block_until_ready(
+                            run_share(name, c.start, c.units))
+
+        mode = "sequential" if sequential else self._mode()
+        saved_steal = self._async.steal
+        if plan_override is not None:
+            self._async.steal = False
+        elif steal is not None:
+            self._async.steal = steal
+        try:
+            thr = self.tracker.throughputs([g.name for g in self.groups])
+            priors = {g.name: (1.0 / t if t > 0 else 1.0)
+                      for g, t in zip(self.groups, thr)}
+            trace = self._async.run(units, run_share, chunk_units, mode,
+                                    unit_time_priors=priors,
+                                    whole_shares=whole_shares)
+        finally:
+            self._async.steal = saved_steal
+
+        if do_warmup:
+            combine(list(trace.outputs))     # warm merge-path compiles too
         t0 = time.perf_counter()
-        value = combine(live)
+        value = combine(list(trace.outputs))
         merge_t = time.perf_counter() - t0
-        # paper overlap model: groups run concurrently; merge serializes
-        hybrid_time = max(times) + comm_cost + merge_t + post_cost
+
+        # measured makespan: concurrent span + un-hidden comm + merge
+        hybrid_time = trace.makespan + comm_cost + merge_t + post_cost
+        # analytic model of the *chunked* assignment (shares round to
+        # whole chunks, so the ideal fractional plan would under- or
+        # over-state the slow group's span)
+        assigned = (list(units) if whole_shares else
+                    _assigned_units(units, [g.name for g in self.groups],
+                                    chunk_units))
+        thr_now = self.tracker.throughputs([g.name for g in self.groups])
+        spans = [u / t for u, t in zip(assigned, thr_now) if t > 0]
+        n_active = sum(1 for u in assigned if u > 0)
+        analytic = (max(spans) if spans else 0.0) + (
+            comm_cost + post_cost if n_active > 1 else 0.0)
+        # the same model with THIS run's observed per-unit times — the
+        # paper's overlap structure (max, not sum) minus EWMA staleness
+        # and machine-speed drift; groups that executed nothing fall
+        # back to the EWMA estimate
+        spans_obs = []
+        for g, u, t in zip(self.groups, assigned, thr_now):
+            if u <= 0:
+                continue
+            done_u = trace.group_units.get(g.name, 0)
+            if done_u > 0:
+                spans_obs.append(u * trace.group_busy[g.name] / done_u)
+            elif t > 0:
+                spans_obs.append(u / t)
+        analytic_obs = (max(spans_obs) if spans_obs else 0.0) + (
+            comm_cost + merge_t + post_cost if n_active > 1 else merge_t)
+        for g in self.groups:
+            n_done = trace.group_units.get(g.name, 0)
+            if n_done > 0:
+                self.tracker.update(g.name, n_done,
+                                    trace.group_busy[g.name])
+                if cache_key:
+                    self.cache.put(cache_key, g.name,
+                                   trace.group_busy[g.name] / n_done,
+                                   g.slowdown)
         # single-device-alone times from calibrated throughput
         single = {}
         for g in self.groups:
             thr = self.tracker.throughputs([g.name])[0]
             single[g.name] = total_units / thr if thr > 0 else float("inf")
-        busy = {g.name: t for g, t in zip(self.groups, times)}
-        res = HybridResult(workload, hybrid_time, single, busy)
-        return WorkSharedOutput(value, res, plan, self.simulated)
+        busy = {g.name: trace.group_busy.get(g.name, 0.0)
+                for g in self.groups}
+        res = HybridResult(workload, hybrid_time, single, busy,
+                           analytic_time=analytic,
+                           steals=trace.steals, n_chunks=trace.n_chunks,
+                           mode=trace.mode,
+                           analytic_observed_time=analytic_obs)
+        return WorkSharedOutput(value, res, plan, self.simulated, trace)
 
     # ------------------------------------------------------------------
     def run_single(self, group_name: str, fn: Callable[[], object]
@@ -158,4 +342,5 @@ class HybridExecutor:
         g = next(g for g in self.groups if g.name == group_name)
         t0 = time.perf_counter()
         out = fn()
+        jax.block_until_ready(out)   # time execution, not async launch
         return out, (time.perf_counter() - t0) * g.slowdown

@@ -13,9 +13,32 @@ from typing import Dict, List, Sequence
 @dataclass(frozen=True)
 class HybridResult:
     workload: str
-    hybrid_time: float
+    hybrid_time: float               # MEASURED makespan (+comm+merge)
     single_times: Dict[str, float]   # device-group name -> alone time
     busy_times: Dict[str, float]     # device-group name -> busy during hybrid
+    analytic_time: float = 0.0       # model makespan from the WorkPlan
+    steals: int = 0                  # chunks moved by work stealing
+    n_chunks: int = 0
+    mode: str = ""                   # "threads" | "virtual" | "sequential"
+    # overlap model evaluated with THIS run's observed per-unit times:
+    # checks the paper's max(t_fast, t_slow) + comm *structure* without
+    # the planning-EWMA's sensitivity to machine-speed drift
+    analytic_observed_time: float = 0.0
+
+    @property
+    def model_agreement(self) -> float:
+        """|measured - analytic| / analytic (0 when no analytic time)."""
+        if self.analytic_time <= 0:
+            return 0.0
+        return abs(self.hybrid_time - self.analytic_time) / self.analytic_time
+
+    @property
+    def overlap_agreement(self) -> float:
+        """|measured - observed-throughput model| / model."""
+        if self.analytic_observed_time <= 0:
+            return 0.0
+        return (abs(self.hybrid_time - self.analytic_observed_time)
+                / self.analytic_observed_time)
 
     @property
     def best_single(self) -> float:
@@ -42,12 +65,18 @@ class HybridResult:
     def row(self) -> str:
         idle = self.idle_fracs
         worst = max(idle.values()) if idle else 0.0
+        extra = ""
+        if self.analytic_time > 0:
+            extra = (f"  model={self.analytic_time * 1e3:9.3f}ms "
+                     f"(±{100 * self.model_agreement:.0f}%)")
+        if self.steals:
+            extra += f"  steals={self.steals}"
         return (f"{self.workload:8s} gain={100 * self.gain:6.1f}%  "
                 f"idle={100 * worst:5.1f}%  "
                 f"eff={100 * self.resource_efficiency:5.1f}%  "
                 f"hybrid={self.hybrid_time * 1e3:9.3f}ms  "
                 f"best-single[{self.best_single_device}]="
-                f"{self.best_single * 1e3:9.3f}ms")
+                f"{self.best_single * 1e3:9.3f}ms" + extra)
 
 
 def summarize(results: Sequence[HybridResult]) -> str:

@@ -36,29 +36,46 @@ def proportional_shares(throughputs: Sequence[float]) -> np.ndarray:
 def integer_shares(total_units: int, throughputs: Sequence[float],
                    min_units: int = 0) -> List[int]:
     """Split ``total_units`` work units proportionally to throughput
-    (largest-remainder rounding). Groups with zero throughput get 0."""
+    (largest-remainder rounding). Groups with zero throughput get 0.
+
+    ``min_units`` is clamped to what is actually feasible
+    (total_units // n_live): an infeasible minimum used to drive the
+    repair loop into over-allocation (no group above the floor to take
+    units back from), spinning forever."""
     shares = proportional_shares(throughputs)
+    live = [i for i, t in enumerate(throughputs) if t > 0]
     raw = shares * total_units
     base = np.floor(raw).astype(int)
-    # enforce minimum for non-dead groups
-    for i, t in enumerate(throughputs):
-        if t > 0 and base[i] < min_units:
-            base[i] = min(min_units, total_units)
-    rem = total_units - base.sum()
+    eff_min = 0
+    if min_units > 0 and live:
+        eff_min = min(int(min_units), total_units // len(live))
+        for i in live:
+            if base[i] < eff_min:
+                base[i] = eff_min
+    rem = int(total_units - base.sum())
     if rem > 0:
+        # hand out by largest fractional remainder — live groups only,
+        # so a zero-throughput group can never be topped up
         frac = raw - np.floor(raw)
-        order = np.argsort(-frac)
-        for i in range(rem):
-            base[order[i % len(order)]] += 1
+        order = sorted(live, key=lambda i: -frac[i])
+        for j in range(rem):
+            base[order[j % len(order)]] += 1
     elif rem < 0:
-        order = np.argsort(-base)
-        i = 0
+        # take back from the largest allocation still above the floor;
+        # feasible eff_min guarantees sum(floors) <= total so this
+        # terminates without dipping below the minimum
         while rem < 0:
-            j = order[i % len(order)]
-            if base[j] > min_units:
-                base[j] -= 1
-                rem += 1
-            i += 1
+            cand = [i for i in live if base[i] > eff_min]
+            if not cand:                      # defensive: floor everywhere
+                cand = [i for i in live if base[i] > 0]
+            if not cand:
+                break
+            j = max(cand, key=lambda i: base[i])
+            take = min(int(base[j]) - (eff_min if base[j] > eff_min
+                                       else 0), -rem)
+            take = max(take, 1)
+            base[j] -= take
+            rem += take
     assert base.sum() == total_units, (base, total_units)
     return [int(b) for b in base]
 

@@ -19,18 +19,24 @@ from jax.experimental import pallas as pl
 
 
 def _bitonic_rows(x: jnp.ndarray) -> jnp.ndarray:
-    """Sort each row ascending; L = power of two (static unrolled net)."""
+    """Sort each row ascending; L = power of two (static unrolled net).
+
+    The stride-j partner of lane i is i^j, i.e. the matching lane in the
+    other j-wide half of each 2j block — so partner values come from a
+    reshape + flip of the block axis, never a gather (an unrolled
+    ``jnp.take`` network compiles catastrophically: each sweep is an
+    L-wide dynamic gather, and interpret mode lowers log^2(L) of them)."""
     TR, L = x.shape
-    idx = jnp.arange(L)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, L), dimension=1)
     k = 2
     while k <= L:
         j = k // 2
         while j >= 1:
-            partner = idx ^ j
-            px = jnp.take(x, partner, axis=1)
-            is_lo = idx < partner
-            ascending = (idx & k) == 0
-            keep_min = jnp.where(ascending, is_lo, ~is_lo)[None, :]
+            xr = x.reshape(TR, L // (2 * j), 2, j)
+            px = jnp.flip(xr, axis=2).reshape(TR, L)
+            is_lo = (lane & j) == 0          # lane < partner
+            ascending = (lane & k) == 0
+            keep_min = is_lo == ascending
             x = jnp.where(keep_min, jnp.minimum(x, px), jnp.maximum(x, px))
             j //= 2
         k *= 2

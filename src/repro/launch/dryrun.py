@@ -193,6 +193,8 @@ def run_cell(arch_id: str, cell: ShapeCell, multi_pod: bool,
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):    # jaxlib returns [dict]
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         n_dev = int(np.prod(list(mesh.shape.values())))

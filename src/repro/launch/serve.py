@@ -1,14 +1,19 @@
 """Production serving launcher: batched generation for an assigned arch.
 
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm3-4b \
-        --batch 4 --new-tokens 16
-"""
+        --batch 4 --new-tokens 16 [--hybrid]
+
+``--hybrid`` splits the request batch across the detected device groups
+through the chunk-pipelined HybridExecutor (rows = work units), so on a
+multi-device host the shares decode concurrently and the report shows
+measured vs model makespan."""
 from __future__ import annotations
 
 import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.models import model_zoo, param
@@ -22,6 +27,8 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--hybrid", action="store_true",
+                    help="work-share the batch across device groups")
     args = ap.parse_args(argv)
 
     cfg = registry.get(args.arch)
@@ -34,9 +41,34 @@ def main(argv=None):
     prompt = jax.random.randint(jax.random.key(1),
                                 (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
+    cache_len = args.prompt_len + args.new_tokens + 1
+
+    if args.hybrid:
+        from repro.core.hybrid_executor import HybridExecutor
+
+        ex = HybridExecutor(n_chunks=min(4, args.batch))
+
+        def run_share(group, start, k):
+            out = generate(cfg, params, prompt[start:start + k],
+                           args.new_tokens, cache_len=cache_len)
+            out.block_until_ready()
+            return out
+
+        ex.calibrate(lambda g, k: run_share(g, 0, k),
+                     probe_units=max(args.batch // 2, 1),
+                     workload=f"serve/{cfg.name}")
+        t0 = time.perf_counter()
+        ws = ex.run_work_shared(
+            f"serve/{cfg.name}", args.batch, run_share,
+            combine=lambda outs: jnp.concatenate(outs, axis=0))
+        dt = time.perf_counter() - t0
+        print(f"{cfg.name}: generated {ws.value.shape} hybrid in {dt:.2f}s")
+        print(ws.result.row())
+        return
+
     t0 = time.perf_counter()
     out = generate(cfg, params, prompt, args.new_tokens,
-                   cache_len=args.prompt_len + args.new_tokens + 1)
+                   cache_len=cache_len)
     out.block_until_ready()
     dt = time.perf_counter() - t0
     print(f"{cfg.name}: generated {out.shape} in {dt:.2f}s")

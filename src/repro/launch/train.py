@@ -27,6 +27,10 @@ def main(argv=None):
                     help="use the full (pod-scale) config — needs real HW")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--inject-failure", action="store_true")
+    ap.add_argument("--chunk-units", type=int, default=1,
+                    help="micro-batches per stealable chunk")
+    ap.add_argument("--no-steal", action="store_true",
+                    help="disable intra-step work stealing")
     args = ap.parse_args(argv)
 
     cfg = registry.get(args.arch)
@@ -48,6 +52,8 @@ def main(argv=None):
         TrainerConfig(accum_units=args.accum, steps=args.steps,
                       ckpt_dir=args.ckpt,
                       ckpt_every=max(args.steps // 3, 1),
+                      chunk_units=args.chunk_units,
+                      steal=not args.no_steal,
                       time_model=lambda g, k: k * (
                           0.001 if g == "accel" else 0.004)),
         injector=inj)

@@ -13,6 +13,12 @@ Per global step of ``accum_units`` micro-batches:
 
 Work units are micro-batches, so SPMD shapes stay uniform — this is the
 DESIGN.md §4.1 adaptation of unequal row splits.
+
+Since the chunk-pipelined refactor, step 2 runs through the
+``AsyncChunkExecutor`` at micro-batch granularity: a group that
+finishes its share steals micro-batches from the straggler's tail
+*within* the step, and the re-plan across steps only has to track slow
+drift, not transient hiccups.
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ import numpy as np
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ArchConfig
 from repro.core import work_sharing
+from repro.core.async_executor import AsyncChunkExecutor
 from repro.core.calibration import ThroughputTracker
 from repro.core.hybrid_executor import DeviceGroup, detect_platform
 from repro.data.pipeline import DataConfig, TokenStream, global_batch_indices
@@ -49,17 +56,21 @@ class TrainerConfig:
     # set, it replaces wall-clock measurement — used to simulate
     # heterogeneity/stragglers reproducibly on a single-device host.
     time_model: Optional[Callable[[str, int], float]] = None
+    chunk_units: int = 1             # micro-batches per stealable chunk
+    steal: bool = True               # intra-step work stealing
 
 
 @dataclass
 class StepRecord:
     step: int
     loss: float
-    units: List[int]
-    group_times: List[float]
-    hybrid_time: float
+    units: List[int]                 # planned units per group
+    group_times: List[float]         # per-group busy time
+    hybrid_time: float               # overlapped makespan, not sum
     idle_fracs: List[float]
     replanned: bool
+    steals: int = 0                  # chunks rebalanced mid-step
+    executed_units: List[int] = field(default_factory=list)
 
 
 class Trainer:
@@ -83,6 +94,14 @@ class Trainer:
             lambda p, b: loss_fn(p, b, cfg)[0]))
         self._update = jax.jit(
             lambda p, g, s, step: apply_updates(opt_cfg, p, g, s, step))
+        # gradient work is dispatched chunk-by-chunk (micro-batch
+        # granularity) so a group that drains its share steals from the
+        # straggler's queue within the step; the trainer always uses
+        # virtual-clock mode — grads from all groups flow into one
+        # optimizer update, so the serialized single-host execution is
+        # the correct semantics and time_model/slowdown set the clock
+        self._chunk_exec = AsyncChunkExecutor(
+            self.groups, steal=tcfg.steal, time_model=tcfg.time_model)
 
     # ------------------------------------------------------------------
     def init_state(self, seed: int = 0):
@@ -146,42 +165,46 @@ class Trainer:
                 self.tracker.mark_planned()
                 replanned = True
 
-            # ---- work-shared gradient computation ----
+            # ---- work-shared gradient computation (chunk-pipelined,
+            # work-stealing: see core.async_executor) ----
+            def run_chunk(group_name, start, k):
+                idx = global_batch_indices(step, tcfg.accum_units, start, k)
+                return self._group_grads(params, idx)
+
+            thr = self.tracker.throughputs([g.name for g in self.groups])
+            priors = {g.name: (1.0 / t if t > 0 else 1.0)
+                      for g, t in zip(self.groups, thr)}
+            trace = self._chunk_exec.run(units, run_chunk,
+                                         tcfg.chunk_units, "virtual",
+                                         unit_time_priors=priors)
             grads_total, loss_total = None, 0.0
-            times = []
-            offset = 0
-            for g, k in zip(self.groups, units):
-                if k == 0:
-                    times.append(0.0)
-                    continue
-                idx = global_batch_indices(step, tcfg.accum_units, offset, k)
-                t0 = time.perf_counter()
-                grads, loss_sum = self._group_grads(params, idx)
-                if tcfg.time_model is not None:
-                    dt = tcfg.time_model(g.name, k)
-                else:
-                    dt = (time.perf_counter() - t0) * g.slowdown
-                times.append(dt)
-                self.tracker.update(g.name, k, dt)
+            for grads, loss_sum in trace.outputs:
                 loss_total += loss_sum
                 grads_total = grads if grads_total is None else jax.tree.map(
                     lambda a, x: a + x, grads_total, grads)
-                offset += k
+            times = [trace.group_busy.get(g.name, 0.0) for g in self.groups]
+            executed = [trace.group_units.get(g.name, 0)
+                        for g in self.groups]
+            for g, k_done, dt in zip(self.groups, executed, times):
+                if k_done > 0:
+                    self.tracker.update(g.name, k_done, dt)
             n_units = sum(units)
             grads_total = jax.tree.map(lambda x: x / n_units, grads_total)
             params, opt, om = self._update(params, grads_total, opt,
                                            jnp.int32(step))
 
-            hybrid_time = max(times) if times else 0.0
+            hybrid_time = trace.makespan
             idle = [(hybrid_time - t) / hybrid_time if hybrid_time else 0.0
                     for t in times]
             rec = StepRecord(step, loss_total / max(n_units, 1), list(units),
-                             times, hybrid_time, idle, replanned)
+                             times, hybrid_time, idle, replanned,
+                             steals=trace.steals, executed_units=executed)
             self.history.append(rec)
             if step % tcfg.log_every == 0:
                 print(f"[train] step={step} loss={rec.loss:.4f} "
                       f"units={units} idle="
                       f"{['%.0f%%' % (100 * i) for i in idle]}"
+                      + (f" steals={trace.steals}" if trace.steals else "")
                       + (" REPLANNED" if replanned else ""), flush=True)
 
             if self.ckpt and (step + 1) % tcfg.ckpt_every == 0:

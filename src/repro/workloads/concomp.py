@@ -106,15 +106,19 @@ def run_hybrid(ex: HybridExecutor, n: int = 1 << 13, avg_deg: float = 4.0
                     k, jnp.asarray(sub))) + lo
         return lab
 
-    ex.calibrate(lambda g, k: run_share(g, 0, k), probe_units=n // 8)
+    ex.calibrate(lambda g, k: run_share(g, 0, k), probe_units=n // 8,
+                 workload=f"CC/{n}")
 
     def combine(outs):
         """Merge via the contracted cross-edge graph: union-find runs
         over component *labels* only (cheap), not all vertices —
-        the paper runs this final step on the GPU for the same reason."""
+        the paper runs this final step on the GPU for the same reason.
+        Works for any number of contiguous chunks: an edge is a cross
+        edge when its endpoints were labeled by different chunks."""
         label = np.concatenate(outs).astype(np.int64)
-        cut = int(np.asarray(outs[0]).shape[0])
-        cross = edges[((edges[:, 0] < cut) != (edges[:, 1] < cut))]
+        cuts = np.cumsum([np.asarray(o).shape[0] for o in outs])[:-1]
+        piece = lambda v: np.searchsorted(cuts, v, side="right")
+        cross = edges[piece(edges[:, 0]) != piece(edges[:, 1])]
         uniq, inv = np.unique(label, return_inverse=True)
         uf = _UF(len(uniq))
         la = inv[cross[:, 0]]
@@ -125,4 +129,8 @@ def run_hybrid(ex: HybridExecutor, n: int = 1 << 13, avg_deg: float = 4.0
         return uniq[root][inv]
 
     comm = len(edges) * 8 / 6e9
-    return ex.run_work_shared("CC", n, run_share, combine, comm_cost=comm)
+    # each chunk's induced subgraph has a data-dependent edge count —
+    # every chunk boundary is a fresh jit shape on either path
+    # (label-prop vs BFS), so the shares run as single whole chunks
+    return ex.run_work_shared("CC", n, run_share, combine, comm_cost=comm,
+                              whole_shares=True)

@@ -33,7 +33,8 @@ def conv_rows(img, w, start: int, n: int, use_kernel: bool = True):
     return out[start - lo:start - lo + n]
 
 
-def run_hybrid(ex: HybridExecutor, size: int = 512, ksize: int = 15
+def run_hybrid(ex: HybridExecutor, size: int = 512, ksize: int = 15,
+               plan_override=None, sequential: bool = False
                ) -> WorkSharedOutput:
     img, w = make_inputs(size, ksize)
     H = img.shape[0]
@@ -50,9 +51,17 @@ def run_hybrid(ex: HybridExecutor, size: int = 512, ksize: int = 15
         out.block_until_ready()
         return out
 
-    ex.calibrate(lambda g, n: run_share(g, 0, n), probe_units=max(H // 8, 1))
+    ex.calibrate(lambda g, n: run_share(g, 0, n), probe_units=max(H // 8, 1),
+                 workload=f"Conv/{size}x{ksize}")
     comm = (ksize - 1) * size * 4 / 6e9       # halo rows over the link
     return ex.run_work_shared(
         "Conv", H, run_share,
         combine=lambda outs: jnp.concatenate(outs, axis=0),
-        comm_cost=comm)
+        comm_cost=comm, plan_override=plan_override, sequential=sequential)
+
+
+def run_hybrid_with_split(ex: HybridExecutor, units, size: int = 512,
+                          ksize: int = 15) -> WorkSharedOutput:
+    """Force an exact [accel, host] unit split (split-sweep benchmark);
+    stealing is disabled by the executor so the split is honored."""
+    return run_hybrid(ex, size=size, ksize=ksize, plan_override=list(units))

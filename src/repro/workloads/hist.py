@@ -36,7 +36,8 @@ def run_hybrid(ex: HybridExecutor, n: int = 1 << 20, n_bins: int = 256,
         return out
 
     ex.calibrate(lambda g, k: run_share(g, 0, k),
-                 probe_units=max(units // 8, 1))
+                 probe_units=max(units // 8, 1),
+                 workload=f"hist/{n}x{n_bins}")
     comm = n_bins * 4 / 6e9
     return ex.run_work_shared(
         "hist", units, run_share,

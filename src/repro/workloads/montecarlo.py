@@ -52,7 +52,8 @@ def run_hybrid(ex: HybridExecutor, n_photons: int = 1 << 18,
         out.block_until_ready()
         return np.asarray(out) * (k * unit)
 
-    ex.calibrate(lambda g, k: run_share(g, 0, k), probe_units=units // 8)
+    ex.calibrate(lambda g, k: run_share(g, 0, k), probe_units=units // 8,
+                 workload=f"MC/{n_photons}x{unit}")
     out = ex.run_work_shared(
         "MC", units, run_share,
         combine=lambda outs: float(sum(outs)) / n_photons,

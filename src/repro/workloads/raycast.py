@@ -83,7 +83,8 @@ def run_hybrid(ex: HybridExecutor, n_rays: int = 1 << 16, d: int = 64
         t.block_until_ready()
         return np.asarray(t)
 
-    ex.calibrate(lambda g, k: p1(g, 0, k), probe_units=n_rays // 8)
+    ex.calibrate(lambda g, k: p1(g, 0, k), probe_units=n_rays // 8,
+                 workload=f"RC/entry/{n_rays}x{d}")
     o1 = ex.run_work_shared("RC/entry", n_rays, p1,
                             combine=lambda o: np.concatenate(o))
     t_in = jnp.asarray(o1.value)
@@ -95,7 +96,8 @@ def run_hybrid(ex: HybridExecutor, n_rays: int = 1 << 16, d: int = 64
         c.block_until_ready()
         return np.asarray(c)
 
-    ex.calibrate(lambda g, k: p2(g, 0, k), probe_units=n_rays // 16)
+    ex.calibrate(lambda g, k: p2(g, 0, k), probe_units=n_rays // 16,
+                 workload=f"RC/march/{n_rays}x{d}")
     o2 = ex.run_work_shared("RC", n_rays, p2,
                             combine=lambda o: np.concatenate(o))
     # combined metrics over both phases

@@ -67,7 +67,8 @@ def run_hybrid(ex: HybridExecutor, n: int = 1 << 18, n_bins: int = 64
         return out
 
     ex.calibrate(lambda g, k: run_share(g, 0, k),
-                 probe_units=max(n_bins // 8, 1))
+                 probe_units=max(n_bins // 8, 1),
+                 workload=f"sort/{n}x{n_bins}")
     comm = 2 * n_bins * 4 / 6e9               # bin index ranges
     return ex.run_work_shared(
         "sort", n_bins, run_share,

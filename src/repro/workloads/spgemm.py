@@ -47,7 +47,8 @@ def run_hybrid(ex: HybridExecutor, n: int = 1024, density: float = 0.02
         out.block_until_ready()
         return np.asarray(out)
 
-    ex.calibrate(lambda g, k: run_share(g, 0, k), probe_units=n // 8)
+    ex.calibrate(lambda g, k: run_share(g, 0, k), probe_units=n // 8,
+                 workload=f"spgemm/{n}x{density}")
     comm = n * n * density * 8 / 6e9           # C shares back
     return ex.run_work_shared(
         "spgemm", n, run_share,

@@ -1,0 +1,208 @@
+"""Tests for the chunk-pipelined async executor + work stealing.
+
+The fake-clock tests drive AsyncChunkExecutor with a deterministic
+``time_model`` so the virtual-clock schedule (and therefore the
+asserted makespans) is exactly reproducible.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.async_executor import AsyncChunkExecutor, make_chunks
+from repro.core.calibration import clear_calibration_cache
+from repro.core.hybrid_executor import DeviceGroup, HybridExecutor
+
+
+def _groups():
+    return [DeviceGroup("accel", [], "accel"),
+            DeviceGroup("host", [], "host")]
+
+
+def _collect(group, start, k):
+    return (group, start, k)
+
+
+# ---------------------------------------------------------------------------
+# chunking
+# ---------------------------------------------------------------------------
+def test_make_chunks_grid_stable_and_contiguous():
+    q1 = make_chunks([80, 20], ["a", "b"], 10)
+    q2 = make_chunks([60, 40], ["a", "b"], 10)
+    # grid identical regardless of the split: same starts/sizes
+    all1 = sorted([(c.start, c.units) for q in q1.values() for c in q])
+    all2 = sorted([(c.start, c.units) for q in q2.values() for c in q])
+    assert all1 == all2
+    # full contiguous coverage
+    cover = sorted((c.start, c.units) for q in q1.values() for c in q)
+    pos = 0
+    for s, u in cover:
+        assert s == pos
+        pos += u
+    assert pos == 100
+    # shares rounded to whole chunks
+    assert sum(c.units for c in q1["a"]) == 80
+    assert sum(c.units for c in q2["b"]) == 40
+
+
+def test_fake_clock_makespan_is_max_not_sum():
+    """Measured hybrid makespan ~= max(group times), not sum(times)."""
+    # accel 1 s/unit, host 4 s/unit; balanced plan: 16 and 4 units
+    ex = AsyncChunkExecutor(_groups(),
+                            time_model=lambda g, k: k * (1.0 if g == "accel"
+                                                         else 4.0))
+    trace = ex.run([16, 4], _collect, chunk_units=2, mode="virtual",
+                   unit_time_priors={"accel": 1.0, "host": 4.0})
+    assert trace.n_chunks == 10
+    assert trace.makespan == pytest.approx(16.0)        # max, not 32
+    assert trace.group_busy["accel"] == pytest.approx(16.0)
+    assert trace.group_busy["host"] == pytest.approx(16.0)
+    # sequential baseline: same chunks, serial loop -> sum
+    seq = ex.run([16, 4], _collect, chunk_units=2, mode="sequential",
+                 unit_time_priors={"accel": 1.0, "host": 4.0})
+    assert seq.makespan == pytest.approx(32.0)
+
+
+def test_outputs_in_unit_order_and_exactly_once():
+    calls = []
+
+    def run_chunk(g, s, k):
+        calls.append((s, k))
+        return (s, k)
+
+    ex = AsyncChunkExecutor(_groups(),
+                            time_model=lambda g, k: k * (1.0 if g == "accel"
+                                                         else 3.0))
+    trace = ex.run([12, 4], run_chunk, chunk_units=2, mode="virtual")
+    # outputs arrive sorted by start unit regardless of execution order
+    starts = [o[0] for o in trace.outputs]
+    assert starts == sorted(starts)
+    covered = []
+    for s, k in trace.outputs:
+        covered.extend(range(s, s + k))
+    assert covered == list(range(16))
+    assert len(calls) == trace.n_chunks
+
+
+def test_work_stealing_rebalances_midrun_straggler():
+    """accel slows down 4x mid-run; the host steals from its tail and
+    the makespan beats the no-steal schedule."""
+    def model(state):
+        def time_model(g, k):
+            if g == "accel":
+                state["n"] += 1
+                return k * (4.0 if state["n"] > 4 else 1.0)  # straggles
+            return k * 2.0
+        return time_model
+
+    st1 = {"n": 0}
+    ex = AsyncChunkExecutor(_groups(), steal=True, time_model=model(st1))
+    stolen = ex.run([24, 8], _collect, chunk_units=2, mode="virtual",
+                    unit_time_priors={"accel": 1.0, "host": 2.0})
+    st2 = {"n": 0}
+    ex_ns = AsyncChunkExecutor(_groups(), steal=False,
+                               time_model=model(st2))
+    fixed = ex_ns.run([24, 8], _collect, chunk_units=2, mode="virtual",
+                      unit_time_priors={"accel": 1.0, "host": 2.0})
+    assert stolen.steals > 0
+    assert fixed.steals == 0
+    assert stolen.makespan < fixed.makespan
+    # all work still done exactly once
+    assert sum(stolen.group_units.values()) == 32
+
+
+def test_steal_never_duplicates_or_drops_units():
+    for steal in (True, False):
+        ex = AsyncChunkExecutor(
+            _groups(), steal=steal,
+            time_model=lambda g, k: k * (1.0 if g == "accel" else 7.0))
+        trace = ex.run([10, 10], _collect, chunk_units=1, mode="virtual")
+        assert len(trace.outputs) == trace.n_chunks == 20
+        starts = [o[1] for o in trace.outputs]
+        assert starts == list(range(0, 20))
+
+
+# ---------------------------------------------------------------------------
+# HybridExecutor steady state (calibration cache)
+# ---------------------------------------------------------------------------
+def test_steady_state_executes_each_chunk_exactly_once():
+    clear_calibration_cache()
+    counts = {"calls": 0}
+
+    def run_share(g, s, k):
+        counts["calls"] += 1
+        return list(range(s, s + k))
+
+    def combine(outs):
+        flat = [x for o in outs for x in o]
+        return flat
+
+    def make_ex():
+        return HybridExecutor(simulated_ratio=4.0, n_chunks=8)
+
+    ex = make_ex()
+    ex.calibrate(lambda g, k: run_share(g, 0, k), probe_units=8,
+                 workload="t")
+    out1 = ex.run_work_shared("t", 64, run_share, combine)
+    assert out1.value == list(range(64))
+
+    # fresh executor, warm cache: calibrate() must not execute probes,
+    # run_work_shared must execute each chunk exactly once, no warmup
+    counts["calls"] = 0
+    ex2 = make_ex()
+    ex2.calibrate(lambda g, k: run_share(g, 0, k), probe_units=8,
+                  workload="t")
+    assert counts["calls"] == 0, "cache hit must skip probe runs"
+    out2 = ex2.run_work_shared("t", 64, run_share, combine)
+    assert counts["calls"] == out2.trace.n_chunks
+    assert out2.value == list(range(64))
+    clear_calibration_cache()
+
+
+def test_cold_cache_probes_and_warms_once():
+    clear_calibration_cache()
+    counts = {"calls": 0}
+
+    def run_share(g, s, k):
+        counts["calls"] += 1
+        return [0] * k
+
+    ex = HybridExecutor(simulated_ratio=4.0, n_chunks=4)
+    ex.calibrate(lambda g, k: run_share(g, 0, k), probe_units=4,
+                 workload="cold")
+    # cold probe: warmup + 1 measured run per group
+    assert counts["calls"] == 2 * len(ex.groups)
+    clear_calibration_cache()
+
+
+# ---------------------------------------------------------------------------
+# real overlap (needs >=2 devices; subprocess forces them)
+# ---------------------------------------------------------------------------
+def test_multi_device_overlap_beats_sequential_baseline():
+    """Under --xla_force_host_platform_device_count=2 the threaded
+    executor's wall-clock must beat the seed's sequential-loop baseline
+    (warmup + min-of-2 per share = 3x execution) by >25%."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    code = ("import json; from benchmarks.overlap_check import run; "
+            "r = run(size=512, ksize=9); "
+            "print('RESULT' + json.dumps(r))")
+    res = subprocess.run([sys.executable, "-c", code], cwd=root,
+                         capture_output=True, text=True, timeout=560,
+                         env=env)
+    assert res.returncode == 0, res.stdout + res.stderr
+    import json
+    line = [l for l in res.stdout.splitlines()
+            if l.startswith("RESULT")][0]
+    r = json.loads(line[len("RESULT"):])
+    assert r["n_devices"] >= 2
+    assert r["mode"] == "threads"
+    assert r["ratio_vs_legacy3x"] < 0.75, r
+    # and threading must not regress vs the fair 1x serial loop
+    assert r["ratio_vs_seq1x"] < 1.1, r

@@ -1,8 +1,15 @@
 """Unit + property tests for the HEFT task scheduler (paper §5.4.4)."""
+import time
+
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.task_graph import TaskGraph
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                           # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 
 def _lr_graph():
@@ -44,37 +51,97 @@ def test_host_only_task():
     assert s.assignments["solve"].device == "cpu0"
 
 
-@given(seed=st.integers(0, 10_000), n=st.integers(2, 12))
-@settings(max_examples=60, deadline=None)
-def test_random_dag_schedule_valid(seed, n):
-    import random
-    rng = random.Random(seed)
+def _sleeper(dt, tag):
+    def fn(*deps):
+        time.sleep(dt)
+        return (tag, deps)
+    return fn
+
+
+def _payload_graph(dt=0.05):
+    """Two independent branches + a join — branches can overlap."""
     g = TaskGraph()
-    names = []
-    for i in range(n):
-        deps = [d for d in names if rng.random() < 0.3]
-        costs = {}
-        if rng.random() < 0.9:
-            costs["cpu"] = rng.uniform(0.1, 2.0)
-        if rng.random() < 0.9 or not costs:
-            costs["tpu"] = rng.uniform(0.1, 2.0)
-        g.add(f"t{i}", costs, deps=deps,
-              output_bytes=rng.uniform(0, 1e9))
-        names.append(f"t{i}")
-    s = g.schedule({"cpu0": "cpu", "tpu0": "tpu"})
-    # every task scheduled exactly once, after its deps
-    assert set(s.assignments) == set(names)
-    for name, a in s.assignments.items():
-        for d in g.tasks[name].deps:
-            assert a.start >= s.assignments[d].end - 1e-9
-    # no overlap on the same device
-    by_dev = {}
-    for a in s.assignments.values():
-        by_dev.setdefault(a.device, []).append((a.start, a.end))
-    for ivals in by_dev.values():
-        ivals.sort()
-        for (s0, e0), (s1, e1) in zip(ivals, ivals[1:]):
-            assert s1 >= e0 - 1e-9
-    # makespan consistency
-    assert s.makespan == pytest.approx(
-        max(a.end for a in s.assignments.values()))
+    g.add("a", {"cpu": dt}, fn=_sleeper(dt, "a"))
+    g.add("b", {"tpu": dt}, fn=_sleeper(dt, "b"))
+    g.add("a2", {"cpu": dt}, deps=["a"], fn=_sleeper(dt, "a2"))
+    g.add("b2", {"tpu": dt}, deps=["b"], fn=_sleeper(dt, "b2"))
+    g.add("join", {"cpu": dt, "tpu": dt}, deps=["a2", "b2"],
+          fn=lambda x, y: ("join", x, y))
+    return g
+
+
+def test_execute_concurrent_matches_serial_and_overlaps():
+    dt = 0.05
+    g = _payload_graph(dt)
+    sched = g.schedule({"cpu0": "cpu", "tpu0": "tpu"})
+    serial = g.execute(sched)
+    t_serial = g.last_measured_makespan
+    conc = g.execute(sched, concurrent=True)
+    t_conc = g.last_measured_makespan
+    assert serial == conc
+    # serial runs 5 sleeps back-to-back (~5*dt); concurrent lanes
+    # overlap the two branches (~3*dt).  Allow generous slack.
+    assert t_conc < t_serial - dt / 2, (t_conc, t_serial)
+
+
+def test_execute_concurrent_error_skips_dependents():
+    """A failed task's error is re-raised and its cross-lane dependents
+    never execute (they must not run on garbage/None inputs)."""
+    ran = []
+    g = TaskGraph()
+    g.add("bad", {"cpu": 0.01}, fn=lambda: 1 / 0)
+    g.add("dep", {"tpu": 0.01}, deps=["bad"],
+          fn=lambda b: ran.append(("dep", b)))
+    sched = g.schedule({"cpu0": "cpu", "tpu0": "tpu"})
+    with pytest.raises(ZeroDivisionError):
+        g.execute(sched, concurrent=True)
+    assert ran == []
+
+
+def test_execute_concurrent_respects_dependencies():
+    order = []
+    g = TaskGraph()
+    g.add("p", {"cpu": 0.01},
+          fn=lambda: (time.sleep(0.03), order.append("p"))[1] or "p")
+    g.add("c", {"tpu": 0.01}, deps=["p"],
+          fn=lambda p: order.append("c") or "c")
+    sched = g.schedule({"cpu0": "cpu", "tpu0": "tpu"})
+    g.execute(sched, concurrent=True)
+    assert order == ["p", "c"]
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 10_000), n=st.integers(2, 12))
+    @settings(max_examples=60, deadline=None)
+    def test_random_dag_schedule_valid(seed, n):
+        import random
+        rng = random.Random(seed)
+        g = TaskGraph()
+        names = []
+        for i in range(n):
+            deps = [d for d in names if rng.random() < 0.3]
+            costs = {}
+            if rng.random() < 0.9:
+                costs["cpu"] = rng.uniform(0.1, 2.0)
+            if rng.random() < 0.9 or not costs:
+                costs["tpu"] = rng.uniform(0.1, 2.0)
+            g.add(f"t{i}", costs, deps=deps,
+                  output_bytes=rng.uniform(0, 1e9))
+            names.append(f"t{i}")
+        s = g.schedule({"cpu0": "cpu", "tpu0": "tpu"})
+        # every task scheduled exactly once, after its deps
+        assert set(s.assignments) == set(names)
+        for name, a in s.assignments.items():
+            for d in g.tasks[name].deps:
+                assert a.start >= s.assignments[d].end - 1e-9
+        # no overlap on the same device
+        by_dev = {}
+        for a in s.assignments.values():
+            by_dev.setdefault(a.device, []).append((a.start, a.end))
+        for ivals in by_dev.values():
+            ivals.sort()
+            for (s0, e0), (s1, e1) in zip(ivals, ivals[1:]):
+                assert s1 >= e0 - 1e-9
+        # makespan consistency
+        assert s.makespan == pytest.approx(
+            max(a.end for a in s.assignments.values()))

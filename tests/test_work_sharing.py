@@ -1,9 +1,21 @@
-"""Unit + property tests for the work-sharing planner (paper §5.4.3)."""
+"""Unit + property tests for the work-sharing planner (paper §5.4.3).
+
+The hypothesis-based property tests skip when hypothesis is absent
+(it is a dev-only dependency, see requirements-dev.txt); the
+random-trial tests below always run.
+"""
+import random
+
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import work_sharing as ws
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                           # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 
 def test_paper_split_rule():
@@ -19,43 +31,88 @@ def test_integer_shares_basic():
     assert sum(ws.integer_shares(7, [1, 1, 1])) == 7
 
 
-@given(total=st.integers(1, 10_000),
-       thr=st.lists(st.floats(0.0, 100.0), min_size=1, max_size=8))
-@settings(max_examples=200, deadline=None)
-def test_integer_shares_properties(total, thr):
-    if sum(thr) <= 0:
-        with pytest.raises(ValueError):
-            ws.integer_shares(total, thr)
-        return
-    units = ws.integer_shares(total, thr)
-    # invariant 1: conservation
-    assert sum(units) == total
+def _check_shares_invariants(total, thr, min_units=0):
+    units = ws.integer_shares(total, thr, min_units=min_units)
+    # invariant 1: conservation (never over- or under-allocates)
+    assert sum(units) == total, (total, thr, min_units, units)
     # invariant 2: zero-throughput groups get nothing
     for u, t in zip(units, thr):
         if t == 0:
-            assert u == 0
-    # invariant 3: proportionality within rounding
-    shares = ws.proportional_shares(thr)
-    for u, s in zip(units, shares):
-        assert abs(u - s * total) <= len(thr)
+            assert u == 0, (total, thr, min_units, units)
+    # invariant 3: the effective minimum is honored for live groups
+    live = [u for u, t in zip(units, thr) if t > 0]
+    if min_units > 0 and live:
+        eff_min = min(min_units, total // len(live))
+        assert all(u >= eff_min for u in live), (total, thr, min_units,
+                                                units)
+    return units
 
 
-@given(total=st.integers(1, 1000),
-       thr=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=4),
-       comm=st.floats(0.0, 1.0))
-@settings(max_examples=200, deadline=None)
-def test_plan_work_metrics(total, thr, comm):
-    plan = ws.plan_work(total, thr, comm_cost=comm)
-    # hybrid span >= the perfectly balanced lower bound
-    lower = total / sum(thr)
-    assert plan.hybrid_time >= lower - 1e-9
-    # idle fractions in [0, 1]; efficiency in [0, 1]
-    assert all(-1e-9 <= i <= 1 + 1e-9 for i in plan.idle_fracs)
-    assert -1e-9 <= plan.resource_efficiency <= 1 + 1e-9
-    # with zero comm, hybrid never loses to the best single device by
-    # more than one work unit of the fastest group
-    if comm == 0.0:
-        assert plan.hybrid_time <= plan.best_single_time + 1 / max(thr)
+def test_integer_shares_min_units_all_floor():
+    """Regression: min_units forcing every group to the floor used to
+    spin the rem<0 repair loop forever / over-allocate."""
+    # 3 live groups, min 5 each would need 15 > 10 total: must clamp
+    units = ws.integer_shares(10, [1.0, 1.0, 1.0], min_units=5)
+    assert sum(units) == 10
+    assert all(u >= 10 // 3 for u in units)
+    # pathological skew + infeasible minimum
+    units = ws.integer_shares(7, [100.0, 0.01, 0.01], min_units=3)
+    assert sum(units) == 7
+    # feasible minimum still honored
+    units = ws.integer_shares(100, [99.0, 1.0], min_units=10)
+    assert sum(units) == 100 and min(units) >= 10
+
+
+def test_integer_shares_min_units_random_property():
+    """Property-style sweep over random (total, throughputs, min_units)
+    — runs without hypothesis so the invariants are always checked."""
+    rng = random.Random(0xC0FFEE)
+    for _ in range(500):
+        n = rng.randint(1, 6)
+        total = rng.randint(1, 5000)
+        thr = [rng.choice([0.0, rng.uniform(1e-3, 100.0)])
+               for _ in range(n)]
+        if sum(thr) <= 0:
+            thr[rng.randrange(n)] = rng.uniform(1e-3, 100.0)
+        min_units = rng.randint(0, 2 * max(total // max(n, 1), 1))
+        _check_shares_invariants(total, thr, min_units)
+
+
+if HAVE_HYPOTHESIS:
+    @given(total=st.integers(1, 10_000),
+           thr=st.lists(st.floats(0.0, 100.0), min_size=1, max_size=8),
+           min_units=st.integers(0, 64))
+    @settings(max_examples=200, deadline=None)
+    def test_integer_shares_properties(total, thr, min_units):
+        if sum(thr) <= 0:
+            with pytest.raises(ValueError):
+                ws.integer_shares(total, thr)
+            return
+        units = _check_shares_invariants(total, thr, min_units)
+        if min_units == 0:
+            # proportionality within rounding
+            shares = ws.proportional_shares(thr)
+            for u, s in zip(units, shares):
+                assert abs(u - s * total) <= len(thr)
+
+
+if HAVE_HYPOTHESIS:
+    @given(total=st.integers(1, 1000),
+           thr=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=4),
+           comm=st.floats(0.0, 1.0))
+    @settings(max_examples=200, deadline=None)
+    def test_plan_work_metrics(total, thr, comm):
+        plan = ws.plan_work(total, thr, comm_cost=comm)
+        # hybrid span >= the perfectly balanced lower bound
+        lower = total / sum(thr)
+        assert plan.hybrid_time >= lower - 1e-9
+        # idle fractions in [0, 1]; efficiency in [0, 1]
+        assert all(-1e-9 <= i <= 1 + 1e-9 for i in plan.idle_fracs)
+        assert -1e-9 <= plan.resource_efficiency <= 1 + 1e-9
+        # with zero comm, hybrid never loses to the best single device
+        # by more than one work unit of the fastest group
+        if comm == 0.0:
+            assert plan.hybrid_time <= plan.best_single_time + 1 / max(thr)
 
 
 def test_plan_work_gain_positive_for_balanced_pair():

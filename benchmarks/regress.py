@@ -1,0 +1,100 @@
+"""Bench-trajectory gate: fail when a kernel regresses vs its previous
+BENCH_history.jsonl entry.
+
+``benchmarks/run.py --json`` appends one timestamped row per kernel per
+run; this script compares, per (backend, kernel), the latest entry
+against the one before it and exits non-zero when any kernel got more
+than ``--threshold`` (default 20%) slower AND by more than
+``--min-delta-us`` (default 100us — relative noise on a sub-100us
+kernel is all dispatch jitter).  Missing file, a single run, or
+first-seen kernels all pass (no trajectory yet -> nothing to gate).
+
+Usage: python benchmarks/regress.py [--threshold 0.2]
+       [--min-delta-us 100] [--history PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_history(path: str):
+    rows = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    row = json.loads(line)
+                except ValueError:
+                    continue
+                if isinstance(row, dict) and "name" in row and "us" in row:
+                    rows.append(row)
+    except OSError:
+        pass
+    return rows
+
+
+def check(rows, threshold: float, min_delta_us: float = 100.0):
+    """Per (backend, kernel): (previous, latest) us; returns failures.
+
+    Grouping includes the backend so a run on a different box/backend
+    never diffs against another backend's trajectory."""
+    by_name = {}
+    for row in rows:                      # file order == append order
+        key = (row.get("backend", "?"), row["name"])
+        by_name.setdefault(key, []).append(row)
+    failures, lines = [], []
+    for backend, name in sorted(by_name):
+        entries = by_name[(backend, name)]
+        name = f"[{backend}] {name}"
+        if len(entries) < 2:
+            lines.append(f"{name}: {entries[-1]['us']:.0f}us (first entry)")
+            continue
+        prev, last = entries[-2], entries[-1]
+        if prev["us"] <= 0 or last["us"] <= 0:
+            continue
+        ratio = last["us"] / prev["us"]
+        status = "OK"
+        if ratio > 1 + threshold and last["us"] - prev["us"] > min_delta_us:
+            status = "REGRESSION"
+            failures.append((name, prev["us"], last["us"], ratio))
+        lines.append(f"{name}: {prev['us']:.0f}us -> {last['us']:.0f}us "
+                     f"({ratio:.2f}x) {status}")
+    return failures, lines
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="max allowed fractional slowdown (0.2 = 20%%)")
+    ap.add_argument("--min-delta-us", type=float, default=100.0,
+                    help="ignore regressions smaller than this absolute "
+                         "delta (dispatch jitter on tiny kernels)")
+    ap.add_argument("--history",
+                    default=os.path.join(_ROOT, "BENCH_history.jsonl"))
+    args = ap.parse_args()
+
+    rows = load_history(args.history)
+    if not rows:
+        print(f"regress: no history at {args.history} (nothing to gate)")
+        return 0
+    failures, lines = check(rows, args.threshold, args.min_delta_us)
+    for ln in lines:
+        print("regress:", ln)
+    if failures:
+        print(f"regress: FAIL — {len(failures)} kernel(s) regressed "
+              f">{args.threshold:.0%}")
+        return 1
+    print("regress: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,10 +12,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 ``--json`` additionally writes machine-readable results so the perf
 trajectory is tracked across PRs:
-  BENCH_kernels.json — kernels/* and roofline/* rows
-  BENCH_hybrid.json  — table2/fig3/fig4/fig5/split_sweep rows
+  BENCH_kernels.json  — kernels/* and roofline/* rows
+  BENCH_hybrid.json   — table2/fig3/fig4/fig5/split_sweep rows
+  BENCH_history.jsonl — one timestamped line per kernel row per run;
+                        benchmarks/regress.py gates on it (>20%
+                        regression vs the previous entry fails)
 """
 import argparse
+import datetime
 import io
 import json
 import os
@@ -80,8 +84,19 @@ def main() -> None:
             json.dump({"meta": meta, "rows": kernel_rows}, f, indent=1)
         with open(os.path.join(_ROOT, "BENCH_hybrid.json"), "w") as f:
             json.dump({"meta": meta, "rows": hybrid_rows}, f, indent=1)
+        ts = datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds")
+        n_hist = 0
+        with open(os.path.join(_ROOT, "BENCH_history.jsonl"), "a") as f:
+            for row in kernel_rows:
+                if not row["name"].startswith("kernels/"):
+                    continue
+                f.write(json.dumps({"ts": ts, "backend": meta["backend"],
+                                    **row}) + "\n")
+                n_hist += 1
         print(f"# wrote BENCH_kernels.json ({len(kernel_rows)} rows), "
-              f"BENCH_hybrid.json ({len(hybrid_rows)} rows)")
+              f"BENCH_hybrid.json ({len(hybrid_rows)} rows), "
+              f"BENCH_history.jsonl (+{n_hist} rows)")
 
 
 if __name__ == '__main__':

@@ -106,22 +106,28 @@ class ThroughputTracker:
         self._planned_thr = self.throughputs()
 
 
-def measure(fn: Callable[[], object], warmup: int = 1, iters: int = 3
-            ) -> float:
+def measure(fn: Callable[[], object], warmup: int = 1, iters: int = 3,
+            reduce: str = "mean") -> float:
     """Wall-clock a callable, forcing completion of whatever it returns.
 
     JAX dispatch is asynchronous: without ``block_until_ready`` on the
     *returned* value this would time the launch, not the execution, and
     every work-sharing plan downstream would be skewed toward whichever
-    group launches fastest."""
+    group launches fastest.
+
+    ``reduce="mean"`` (calibration: expected steady-state cost) or
+    ``"min"`` (autotune search: best-case ranking is robust to noise
+    from other timers/threads on a shared box)."""
     import jax
 
     for _ in range(warmup):
         jax.block_until_ready(fn())
-    t0 = time.perf_counter()
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn())
-    return (time.perf_counter() - t0) / iters
+        times.append(time.perf_counter() - t0)
+    return min(times) if reduce == "min" else sum(times) / len(times)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _bilat_kernel(img_ref, sp_ref, rng_ref, o_ref, *, K: int,
                   row_tile: int, n_levels: int):
@@ -39,11 +41,37 @@ def _bilat_kernel(img_ref, sp_ref, rng_ref, o_ref, *, K: int,
     o_ref[...] = (num / jnp.maximum(den, 1e-12)).astype(o_ref.dtype)
 
 
+def bilateral_lut_xla(img: jnp.ndarray, spatial_lut: jnp.ndarray,
+                      range_lut: jnp.ndarray) -> jnp.ndarray:
+    """The LUT filter as a plain XLA program (K*K shifted fused
+    lookups) — the non-Pallas candidate the autotuner ranks."""
+    H, W = img.shape
+    K = spatial_lut.shape[0]
+    r = K // 2
+    n_levels = range_lut.shape[0]
+    padded = jnp.pad(img, r, mode="edge")
+    num = jnp.zeros((H, W), jnp.float32)
+    den = jnp.zeros((H, W), jnp.float32)
+    for di in range(K):
+        for dj in range(K):
+            nb = jax.lax.dynamic_slice(padded, (di, dj), (H, W))
+            q = jnp.clip(jnp.abs(nb - img).astype(jnp.int32), 0,
+                         n_levels - 1)
+            wgt = spatial_lut[di, dj] * jnp.take(range_lut, q)
+            num += wgt * nb
+            den += wgt
+    return (num / jnp.maximum(den, 1e-12)).astype(img.dtype)
+
+
 def bilateral_pallas(img: jnp.ndarray, spatial_lut: jnp.ndarray,
                      range_lut: jnp.ndarray, *, row_tile: int = 64,
-                     interpret: bool = True) -> jnp.ndarray:
-    """img: (H, W) f32 intensities in [0, 255]. LUTs from host precompute."""
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """img: (H, W) f32 intensities in [0, 255]. LUTs from host precompute.
+
+    Tunable knob (kernels/autotune.py): row_tile."""
+    interpret = resolve_interpret(interpret)
     H, W = img.shape
+    row_tile = min(row_tile, H)
     K = spatial_lut.shape[0]
     r = K // 2
     pad_h = (-H) % row_tile

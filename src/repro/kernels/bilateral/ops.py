@@ -1,29 +1,77 @@
-"""Bilateral filter: host-LUT task + device kernel (paper §4.6 end-to-end)."""
+"""Bilateral filter: host-LUT task + device kernel (paper §4.6
+end-to-end), with the device filter autotuned."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.host_offload import bilateral_luts
-from repro.kernels.bilateral.bilateral import bilateral_pallas
+from repro.kernels.autotune import (Config, autotune, bucket,
+                                    default_config, freeze)
+from repro.kernels.bilateral.bilateral import (bilateral_lut_xla,
+                                               bilateral_pallas)
 from repro.kernels.bilateral.ref import bilateral_ref
-from repro.kernels.common import default_interpret
+
+# Seed constants (PR 1) / safe default when search is disabled.
+SEED_CONFIG: Config = {"impl": "pallas", "row_tile": 64}
+DEFAULT_CONFIG: Config = {"impl": "xla_lut", "row_tile": 64}
+
+
+def candidates(H: int, W: int, K: int):
+    cands = [{"impl": "xla_lut"}]
+    for rt in (32, 64, 128, 256):
+        if rt > max(H, 64) * 2:
+            continue
+        cands.append({"impl": "pallas", "row_tile": rt})
+    return cands
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _bilat_cfg(img, sp, rl, cfg):
+    c = dict(cfg)
+    if c.get("impl", "pallas") == "xla_lut":
+        return bilateral_lut_xla(img, sp, rl)
+    return bilateral_pallas(img, sp, rl,
+                            row_tile=int(c.get("row_tile", 64)))
+
+
+def shape_bucket(H: int, W: int, K: int) -> str:
+    return f"H{bucket(H)}_W{bucket(W)}_K{K}"
+
+
+def tuned_config(img, sp, rl) -> Config:
+    H, W = img.shape
+    K = sp.shape[0]
+    return autotune(
+        "bilateral", shape_bucket(H, W, K), candidates(H, W, K),
+        lambda cfg: lambda: _bilat_cfg(img, sp, rl, freeze(cfg)),
+        default_config(SEED_CONFIG, DEFAULT_CONFIG))
+
+
+def bilateral_filter(img, sp, rl, *, config: Optional[Config] = None):
+    """LUT-consuming filter with precomputed LUTs (workloads overlap the
+    LUT build on the host pool); config=None -> autotuned."""
+    if config is None:
+        config = tuned_config(img, sp, rl)
+    return _bilat_cfg(img, sp, rl, freeze(config))
 
 
 def bilateral(img, sigma_s: float, sigma_r: float, radius: int,
-              *, use_kernel: bool = True, row_tile: int = 64):
+              *, use_kernel: bool = True,
+              config: Optional[Config] = None,
+              row_tile: Optional[int] = None):
     """Full hybrid pipeline: LUTs precomputed on host (task parallelism),
-    filtering on the accelerator (work shared upstream)."""
+    filtering on the accelerator with the tuned implementation."""
     if not use_kernel:
         return bilateral_ref(img, sigma_s, sigma_r, radius)
     sp, rl = bilateral_luts(sigma_s, sigma_r, radius)     # host task
-    return _bilat_jit(img, jnp.asarray(sp), jnp.asarray(rl),
-                      row_tile=row_tile)
-
-
-@functools.partial(jax.jit, static_argnames=("row_tile",))
-def _bilat_jit(img, sp, rl, *, row_tile: int):
-    return bilateral_pallas(img, sp, rl, row_tile=row_tile,
-                            interpret=default_interpret())
+    sp, rl = jnp.asarray(sp), jnp.asarray(rl)
+    if config is None:
+        if row_tile is not None:
+            config = {"impl": "pallas", "row_tile": row_tile}
+        else:
+            config = tuned_config(img, sp, rl)
+    return _bilat_cfg(img, sp, rl, freeze(config))

@@ -1,6 +1,8 @@
 """Shared kernel utilities."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
 
@@ -8,3 +10,10 @@ def default_interpret() -> bool:
     """Pallas interpret mode: True off-TPU (this container is CPU-only;
     TPU is the *target*, interpret=True validates kernel semantics)."""
     return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Kernel entry points take ``interpret=None`` and resolve here, so
+    a *direct* call (not via ops.py) picks the backend-correct mode
+    instead of silently running interpret mode on TPU."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -1,14 +1,20 @@
 """Tiled 2-D convolution Pallas kernel (paper §4.6 Conv, TPU adaptation).
 
-Each grid step computes one output row-tile.  Because halo rows overlap
-across tiles, the padded image stays resident in VMEM and each step
-slices its (row_tile + K - 1)-row window with ``pl.ds`` — the K x K
-filter sweep is a shifted multiply-add on the VPU, the TPU-native
-replacement for CUDA's thread-per-pixel loop.
+Each grid step computes one (row_tile, col_tile) output tile from its
+own halo-expanded input window: the image BlockSpec uses *unblocked*
+element indexing so step (i, j) receives exactly the
+(row_tile + K - 1, col_tile + K - 1) window it needs — the K x K filter
+sweep is a shifted multiply-add on the VPU, and VMEM holds one window
+per step instead of the whole padded image (the pre-autotune version
+kept the full image resident, capping images at ~2k x 2k f32 per core).
 
-VMEM: padded image + (TR, W) out tile; documented limit ~2k x 2k f32
-images per core (16 MiB v5e VMEM) — shard larger images across cores
-(that outer work-sharing is workloads/conv.py's job).
+Tunable knobs (searched by kernels/autotune.py): row_tile, col_tile
+(col_tile=0 -> full width, the 1-D tiling of the seed).
+
+``conv2d_shift_add`` is the same shifted multiply-add as a plain XLA
+program — the tuned CPU winner (XLA's own conv lowering loses badly on
+large filters), and the candidate the autotuner weighs against the
+Pallas tilings per backend.
 """
 from __future__ import annotations
 
@@ -18,37 +24,63 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
 
-def _conv_kernel(img_ref, w_ref, o_ref, *, K: int, row_tile: int):
-    i = pl.program_id(0)
-    img = img_ref[pl.ds(i * row_tile, row_tile + K - 1), :]
+
+def _conv_kernel(img_ref, w_ref, o_ref, *, K: int, row_tile: int,
+                 col_tile: int):
+    img = img_ref[...]                       # (row_tile+K-1, col_tile+K-1)
     w = w_ref[...]                           # (K, K)
-    W_out = o_ref.shape[1]
-    acc = jnp.zeros((row_tile, W_out), jnp.float32)
+    acc = jnp.zeros((row_tile, col_tile), jnp.float32)
     for di in range(K):
         for dj in range(K):
-            acc += w[di, dj] * img[di:di + row_tile, dj:dj + W_out]
+            acc += w[di, dj] * img[di:di + row_tile, dj:dj + col_tile]
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def conv2d_pallas(img: jnp.ndarray, w: jnp.ndarray, *, row_tile: int = 64,
-                  interpret: bool = True) -> jnp.ndarray:
+                  col_tile: int = 0, interpret: bool | None = None
+                  ) -> jnp.ndarray:
     """'same' 2-D correlation. img: (H, W) f32; w: (K, K), odd K."""
+    interpret = resolve_interpret(interpret)
     H, W = img.shape
     K = w.shape[0]
     r = K // 2
+    row_tile = min(row_tile, H)
+    col_tile = W if col_tile <= 0 else min(col_tile, W)
     pad_h = (-H) % row_tile
-    padded = jnp.pad(img, ((r, r + pad_h), (r, r)))
-    grid = ((H + pad_h) // row_tile,)
+    pad_w = (-W) % col_tile
+    padded = jnp.pad(img, ((r, r + pad_h), (r, r + pad_w)))
+    grid = ((H + pad_h) // row_tile, (W + pad_w) // col_tile)
     out = pl.pallas_call(
-        functools.partial(_conv_kernel, K=K, row_tile=row_tile),
+        functools.partial(_conv_kernel, K=K, row_tile=row_tile,
+                          col_tile=col_tile),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(padded.shape, lambda i: (0, 0)),  # whole image
-            pl.BlockSpec((K, K), lambda i: (0, 0)),
+            # halo window per step: element offsets stride by the output
+            # tile while the block extends K-1 past it on both axes
+            pl.BlockSpec((row_tile + K - 1, col_tile + K - 1),
+                         lambda i, j: (i * row_tile, j * col_tile),
+                         indexing_mode=pl.unblocked),
+            pl.BlockSpec((K, K), lambda i, j: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((row_tile, W), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((H + pad_h, W), img.dtype),
+        out_specs=pl.BlockSpec((row_tile, col_tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((H + pad_h, W + pad_w), img.dtype),
         interpret=interpret,
     )(padded, w)
-    return out[:H]
+    return out[:H, :W]
+
+
+def conv2d_shift_add(img: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """XLA shifted multiply-add variant (no Pallas): K*K fused
+    vector FMAs over the full image."""
+    H, W = img.shape
+    K = w.shape[0]
+    r = K // 2
+    padded = jnp.pad(img, ((r, r), (r, r)))
+    acc = jnp.zeros((H, W), jnp.float32)
+    for di in range(K):
+        for dj in range(K):
+            acc = acc + w[di, dj] * jax.lax.dynamic_slice(
+                padded, (di, dj), (H, W))
+    return acc.astype(img.dtype)

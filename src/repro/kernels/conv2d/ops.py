@@ -1,18 +1,79 @@
-"""Jitted public wrapper for conv2d."""
+"""Jitted public wrapper for conv2d, with autotuned configs.
+
+``conv2d(img, w)`` resolves the best (impl, row_tile, col_tile) for this
+backend and shape bucket via kernels/autotune.py; pass ``config=`` to
+pin one, ``use_kernel=False`` for the XLA-conv oracle path.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
-from repro.kernels.common import default_interpret
-from repro.kernels.conv2d.conv2d import conv2d_pallas
+from repro.kernels.autotune import (Config, autotune, bucket,
+                                    default_config, freeze)
+from repro.kernels.conv2d.conv2d import conv2d_pallas, conv2d_shift_add
 from repro.kernels.conv2d.ref import conv2d_ref
 
+# Seed constants (PR 1): 1-D row tiling, whole image resident.
+SEED_CONFIG: Config = {"impl": "pallas", "row_tile": 64, "col_tile": 0}
+# Default when search is disabled: the oracle path (safe everywhere).
+DEFAULT_CONFIG: Config = {"impl": "xla_conv", "row_tile": 64, "col_tile": 0}
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "row_tile"))
-def conv2d(img, w, *, use_kernel: bool = True, row_tile: int = 64):
-    if use_kernel:
-        return conv2d_pallas(img, w, row_tile=row_tile,
-                             interpret=default_interpret())
-    return conv2d_ref(img, w)
+
+def candidates(H: int, W: int, K: int):
+    """Per-shape config space: XLA variants + 2-D Pallas tilings."""
+    cands = [{"impl": "xla_conv"}, {"impl": "xla_shift"}]
+    for rt in (64, 128, 256, 512):
+        if rt > max(H, 64) * 2:
+            continue
+        for ct in (0, 128, 256, 512):
+            if ct and ct > max(W, 128) * 2:
+                continue
+            cands.append({"impl": "pallas", "row_tile": rt, "col_tile": ct})
+    return cands
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _conv2d_cfg(img, w, cfg):
+    c = dict(cfg)
+    impl = c.get("impl", "pallas")
+    if impl == "xla_conv":
+        return conv2d_ref(img, w)
+    if impl == "xla_shift":
+        return conv2d_shift_add(img, w)
+    return conv2d_pallas(img, w, row_tile=int(c.get("row_tile", 64)),
+                         col_tile=int(c.get("col_tile", 0)))
+
+
+def shape_bucket(H: int, W: int, K: int) -> str:
+    return f"H{bucket(H)}_W{bucket(W)}_K{K}"
+
+
+def tuned_config(img, w) -> Config:
+    """Resolve (searching at most once per backend/shape bucket) the
+    tuned config for this input — callable outside the timed path."""
+    H, W = img.shape
+    K = w.shape[0]
+    return autotune(
+        "conv2d", shape_bucket(H, W, K), candidates(H, W, K),
+        lambda cfg: lambda: _conv2d_cfg(img, w, freeze(cfg)),
+        default_config(SEED_CONFIG, DEFAULT_CONFIG))
+
+
+def conv2d(img, w, *, use_kernel: bool = True,
+           config: Optional[Config] = None,
+           row_tile: Optional[int] = None):
+    """'same' 2-D correlation with an autotuned implementation.
+
+    config=None -> autotuned; explicit ``row_tile`` forces the Pallas
+    path with that tiling (legacy API)."""
+    if not use_kernel:
+        return _conv2d_cfg(img, w, freeze({"impl": "xla_conv"}))
+    if config is None:
+        if row_tile is not None:
+            config = {"impl": "pallas", "row_tile": row_tile, "col_tile": 0}
+        else:
+            config = tuned_config(img, w)
+    return _conv2d_cfg(img, w, freeze(config))

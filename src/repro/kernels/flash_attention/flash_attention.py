@@ -6,6 +6,15 @@ TPU).  Online-softmax over K/V blocks; grid = (batch*heads, Q blocks,
 KV blocks) with the KV dimension innermost (sequential on TPU), running
 max / sum / accumulator kept in VMEM scratch.
 
+Tunable knobs (kernels/autotune.py): block_q, block_k.  Non-multiple
+sequence lengths are padded up to the block grid; padded *key*
+positions are masked to -inf (padded query rows are sliced off).
+
+``attention_blocked_xla`` is the plain-XLA counterpart: unrolled Q
+blocks, each attending only its causal key prefix — on causal inputs it
+skips roughly half the score FLOPs the unblocked reference pays, which
+is exactly the tiling-as-tuning argument of the paper.
+
 VMEM: q (TQ, d) + k/v (TK, d) + acc (TQ, d) f32 + scores (TQ, TK).
 TQ=TK=512, d=128 -> ~2.6 MiB; MXU-aligned (multiples of 128).
 """
@@ -18,12 +27,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
+
 NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
                   *, scale: float, causal: bool, block_q: int,
-                  block_k: int):
+                  block_k: int, kv_len: int, k_padded: bool):
     qi = pl.program_id(1)
     kj = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -38,12 +49,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
     k = k_ref[0].astype(jnp.float32)               # (TK, d)
     v = v_ref[0].astype(jnp.float32)
     s = q @ k.T                                    # (TQ, TK)
-    if causal:
-        qpos = qi * block_q + jax.lax.broadcasted_iota(
-            jnp.int32, (block_q, block_k), 0)
+    if causal or k_padded:
         kpos = kj * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 1)
-        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        valid = kpos < kv_len if k_padded else True
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            valid = jnp.logical_and(valid, kpos <= qpos)
+        s = jnp.where(valid, s, NEG_INF)
     m_prev = m_scr[...]                            # (TQ, 1)
     m_cur = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
     p = jnp.exp(s - m_cur)
@@ -60,18 +74,27 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
 def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            block_q: int = 512, block_k: int = 512,
-                           interpret: bool = True):
+                           interpret: bool | None = None):
     """q: (BH, T, d); k/v: (BH, S, d). Returns (BH, T, d)."""
+    interpret = resolve_interpret(interpret)
     BH, T, d = q.shape
     S = k.shape[1]
     block_q = min(block_q, T)
     block_k = min(block_k, S)
-    assert T % block_q == 0 and S % block_k == 0, (T, S, block_q, block_k)
+    pad_q = (-T) % block_q
+    pad_k = (-S) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    Tp, Sp = T + pad_q, S + pad_k
     scale = d ** -0.5
-    grid = (BH, T // block_q, S // block_k)
-    return pl.pallas_call(
+    grid = (BH, Tp // block_q, Sp // block_k)
+    out = pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, causal=causal,
-                          block_q=block_q, block_k=block_k),
+                          block_q=block_q, block_k=block_k, kv_len=S,
+                          k_padded=bool(pad_k)),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
@@ -79,7 +102,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
             pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, T, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((BH, Tp, d), q.dtype),
         scratch_shapes=[
             # (TQ, 1) running max / sum, (TQ, d) accumulator — VMEM
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -88,3 +111,32 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
         ],
         interpret=interpret,
     )(q, k, v)
+    return out[:, :T] if pad_q else out
+
+
+def attention_blocked_xla(q, k, v, *, causal: bool = True,
+                          block_q: int = 256):
+    """Plain-XLA blocked attention: each Q block attends only its
+    (causal) key prefix, skipping ~half the FLOPs of the unblocked
+    reference.  q: (BH, T, d); k/v: (BH, S, d)."""
+    BH, T, d = q.shape
+    S = k.shape[1]
+    block_q = min(block_q, T)
+    scale = d ** -0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    outs = []
+    for lo in range(0, T, block_q):
+        hi = min(lo + block_q, T)
+        qi = q[:, lo:hi].astype(jnp.float32) * scale
+        # causal: keys beyond the last query of this block never score
+        klim = min(hi, S) if causal else S
+        klim = max(klim, 1)
+        s = jnp.einsum("btd,bsd->bts", qi, kf[:, :klim])
+        if causal:
+            mask = (jnp.arange(klim)[None, :]
+                    <= (lo + jnp.arange(hi - lo))[:, None])
+            s = jnp.where(mask[None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        outs.append(jnp.einsum("bts,bsd->btd", w, vf[:, :klim]))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)

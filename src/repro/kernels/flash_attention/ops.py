@@ -1,25 +1,62 @@
-"""Jitted public wrapper for flash attention (GQA-aware)."""
+"""Jitted public wrapper for flash attention (GQA-aware), autotuned."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import default_interpret
-from repro.kernels.flash_attention.flash_attention import \
-    flash_attention_pallas
+from repro.kernels.autotune import (Config, autotune, bucket,
+                                    default_config, freeze)
+from repro.kernels.flash_attention.flash_attention import (
+    attention_blocked_xla, flash_attention_pallas)
 from repro.kernels.flash_attention.ref import attention_ref
 
+# Seed constants (PR 1).
+SEED_CONFIG: Config = {"impl": "pallas", "block_q": 512, "block_k": 512}
+# Default when search is disabled: the unblocked oracle.
+DEFAULT_CONFIG: Config = {"impl": "xla_ref", "block_q": 512, "block_k": 512}
 
-@functools.partial(jax.jit,
-                   static_argnames=("causal", "use_kernel", "block_q",
-                                    "block_k"))
-def flash_attention(q, k, v, *, causal: bool = True, use_kernel: bool = True,
-                    block_q: int = 512, block_k: int = 512):
-    """q: (B, T, H, d); k/v: (B, S, Kv, d) with H % Kv == 0.
 
-    Returns (B, T, H, d)."""
+def candidates(T: int, S: int, d: int):
+    # block sizes clamp to min(block, T/S) inside the kernels, so any
+    # candidate whose blocks both exceed the sequence is a duplicate of
+    # the clamped one — prune rather than time it twice
+    cands = [{"impl": "xla_ref"}]
+    for bq in (128, 256, 512):
+        if bq // 2 < T:
+            cands.append({"impl": "xla_blocked", "block_q": bq})
+    for bq in (256, 512):
+        for bk in (256, 512):
+            if bq // 2 < T or bk // 2 < S:
+                cands.append({"impl": "pallas", "block_q": bq,
+                              "block_k": bk})
+    return cands
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "cfg"))
+def _attn_cfg(qf, kf, vf, causal: bool, cfg):
+    c = dict(cfg)
+    impl = c.get("impl", "pallas")
+    if impl == "xla_ref":
+        return attention_ref(qf, kf, vf, causal=causal)
+    if impl == "xla_blocked":
+        return attention_blocked_xla(qf, kf, vf, causal=causal,
+                                     block_q=int(c.get("block_q", 256)))
+    return flash_attention_pallas(qf, kf, vf, causal=causal,
+                                  block_q=int(c.get("block_q", 512)),
+                                  block_k=int(c.get("block_k", 512)))
+
+
+def shape_bucket(BH: int, T: int, S: int, d: int, causal: bool) -> str:
+    # causal is part of the key: xla_blocked wins on causal inputs by
+    # skipping ~half the FLOPs, a win that does not transfer to
+    # causal=False calls of the same shape
+    return f"BH{bucket(BH)}_T{bucket(T)}_S{bucket(S)}_D{d}_c{int(causal)}"
+
+
+def _flatten_gqa(q, k, v):
     B, T, H, d = q.shape
     S, Kv = k.shape[1], k.shape[2]
     rep = H // Kv
@@ -29,10 +66,42 @@ def flash_attention(q, k, v, *, causal: bool = True, use_kernel: bool = True,
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, d)
     kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, d)
     vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, d)
-    if use_kernel:
-        of = flash_attention_pallas(qf, kf, vf, causal=causal,
-                                    block_q=block_q, block_k=block_k,
-                                    interpret=default_interpret())
+    return qf, kf, vf
+
+
+def _tuned_config_flat(qf, kf, vf, causal: bool) -> Config:
+    BH, T, d = qf.shape
+    S = kf.shape[1]
+    return autotune(
+        "flash_attention", shape_bucket(BH, T, S, d, causal),
+        candidates(T, S, d),
+        lambda cfg: lambda: _attn_cfg(qf, kf, vf, causal, freeze(cfg)),
+        default_config(SEED_CONFIG, DEFAULT_CONFIG))
+
+
+def tuned_config(q, k, v, *, causal: bool = True) -> Config:
+    return _tuned_config_flat(*_flatten_gqa(q, k, v), causal)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, use_kernel: bool = True,
+                    config: Optional[Config] = None,
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None):
+    """q: (B, T, H, d); k/v: (B, S, Kv, d) with H % Kv == 0.
+
+    config=None -> autotuned; explicit block_q/block_k force the Pallas
+    path with those blocks (legacy API).  Returns (B, T, H, d)."""
+    B, T, H, d = q.shape
+    qf, kf, vf = _flatten_gqa(q, k, v)
+    if not use_kernel:
+        of = _attn_cfg(qf, kf, vf, causal, freeze({"impl": "xla_ref"}))
     else:
-        of = attention_ref(qf, kf, vf, causal=causal)
+        if config is None:
+            if block_q is not None or block_k is not None:
+                config = {"impl": "pallas",
+                          "block_q": block_q or SEED_CONFIG["block_q"],
+                          "block_k": block_k or SEED_CONFIG["block_k"]}
+            else:
+                config = _tuned_config_flat(qf, kf, vf, causal)
+        of = _attn_cfg(qf, kf, vf, causal, freeze(config))
     return of.reshape(B, H, T, d).transpose(0, 2, 1, 3)

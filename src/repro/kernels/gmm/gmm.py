@@ -17,8 +17,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
 
-def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref):
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, acc_dtype):
     kd = pl.program_id(3)
     nd = pl.num_programs(3)
 
@@ -27,8 +29,8 @@ def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(
-        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
-        preferred_element_type=jnp.float32)
+        x_ref[0].astype(acc_dtype), w_ref[0].astype(acc_dtype),
+        preferred_element_type=acc_ref.dtype)
 
     @pl.when(kd == nd - 1)
     def _done():
@@ -37,8 +39,12 @@ def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref):
 
 def gmm_pallas(x: jnp.ndarray, w: jnp.ndarray, *, tile_c: int = 128,
                tile_f: int = 128, tile_d: int = 128,
-               interpret: bool = True) -> jnp.ndarray:
-    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+               acc_dtype: str = "float32",
+               interpret: bool | None = None) -> jnp.ndarray:
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F).  Tunable knobs
+    (kernels/autotune.py): tile_c/tile_f/tile_d, acc_dtype (matmul
+    operand precision; the VMEM accumulator stays f32)."""
+    interpret = resolve_interpret(interpret)
     E, C, D = x.shape
     F = w.shape[2]
     tc, tf, td = min(tile_c, C), min(tile_f, F), min(tile_d, D)
@@ -50,7 +56,7 @@ def gmm_pallas(x: jnp.ndarray, w: jnp.ndarray, *, tile_c: int = 128,
     Cp, Dp, Fp = C + pc, D + pd, F + pf
     grid = (E, Cp // tc, Fp // tf, Dp // td)
     out = pl.pallas_call(
-        _gmm_kernel,
+        functools.partial(_gmm_kernel, acc_dtype=jnp.dtype(acc_dtype)),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, tc, td), lambda e, i, j, k: (e, i, k)),

@@ -1,22 +1,81 @@
-"""Jitted public wrapper for the grouped matmul."""
+"""Jitted public wrapper for the grouped matmul, autotuned."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
-from repro.kernels.common import default_interpret
+from repro.kernels.autotune import (Config, autotune, bucket,
+                                    default_config, freeze)
 from repro.kernels.gmm.gmm import gmm_pallas
 from repro.kernels.gmm.ref import gmm_ref
 
+# Seed constants (PR 1).
+SEED_CONFIG: Config = {"impl": "pallas", "tile_c": 128, "tile_f": 128,
+                       "tile_d": 128, "acc_dtype": "float32"}
+# Default when search is disabled: the einsum oracle.
+DEFAULT_CONFIG: Config = {"impl": "xla_einsum", "tile_c": 128,
+                          "tile_f": 128, "tile_d": 128,
+                          "acc_dtype": "float32"}
 
-@functools.partial(jax.jit,
-                   static_argnames=("use_kernel", "tile_c", "tile_f",
-                                    "tile_d"))
-def gmm(x, w, *, use_kernel: bool = True, tile_c: int = 128,
-        tile_f: int = 128, tile_d: int = 128):
-    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
-    if use_kernel:
-        return gmm_pallas(x, w, tile_c=tile_c, tile_f=tile_f, tile_d=tile_d,
-                          interpret=default_interpret())
-    return gmm_ref(x, w)
+
+def candidates(E: int, C: int, D: int, F: int):
+    cands = [{"impl": "xla_einsum"}]
+    for tc in (128, 256):
+        if tc // 2 >= max(C, 128):
+            continue
+        for tf in (128, 256):
+            if tf // 2 >= max(F, 128):
+                continue
+            for td in (128, 256):
+                if td // 2 >= max(D, 128):
+                    continue
+                cands.append({"impl": "pallas", "tile_c": tc,
+                              "tile_f": tf, "tile_d": td})
+    # accumulate-dtype axis: bf16 operands halve VMEM traffic into the
+    # MXU; the f32 scratch accumulator keeps the reduction exact-ish
+    cands.append({"impl": "pallas", "acc_dtype": "bfloat16"})
+    return cands
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _gmm_cfg(x, w, cfg):
+    c = dict(cfg)
+    if c.get("impl", "pallas") == "xla_einsum":
+        return gmm_ref(x, w)
+    return gmm_pallas(x, w, tile_c=int(c.get("tile_c", 128)),
+                      tile_f=int(c.get("tile_f", 128)),
+                      tile_d=int(c.get("tile_d", 128)),
+                      acc_dtype=str(c.get("acc_dtype", "float32")))
+
+
+def shape_bucket(E: int, C: int, D: int, F: int) -> str:
+    return f"E{bucket(E)}_C{bucket(C)}_D{bucket(D)}_F{bucket(F)}"
+
+
+def tuned_config(x, w) -> Config:
+    E, C, D = x.shape
+    F = w.shape[2]
+    return autotune(
+        "gmm", shape_bucket(E, C, D, F), candidates(E, C, D, F),
+        lambda cfg: lambda: _gmm_cfg(x, w, freeze(cfg)),
+        default_config(SEED_CONFIG, DEFAULT_CONFIG))
+
+
+def gmm(x, w, *, use_kernel: bool = True, config: Optional[Config] = None,
+        tile_c: Optional[int] = None, tile_f: Optional[int] = None,
+        tile_d: Optional[int] = None):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F).  config=None ->
+    autotuned; explicit tiles force the Pallas path (legacy API)."""
+    if not use_kernel:
+        return _gmm_cfg(x, w, freeze({"impl": "xla_einsum"}))
+    if config is None:
+        if tile_c is not None or tile_f is not None or tile_d is not None:
+            config = {"impl": "pallas",
+                      "tile_c": tile_c or SEED_CONFIG["tile_c"],
+                      "tile_f": tile_f or SEED_CONFIG["tile_f"],
+                      "tile_d": tile_d or SEED_CONFIG["tile_d"]}
+        else:
+            config = tuned_config(x, w)
+    return _gmm_cfg(x, w, freeze(config))

@@ -3,12 +3,22 @@
 The CUDA version uses shared-memory atomics per warp.  TPUs have no
 atomics; the adaptation IS the paper's own hybrid merge generalized:
 every grid tile computes a *partial* histogram of its VMEM-resident
-slice via a one-hot matmul (MXU-friendly), and partials accumulate into
-the output block across the (sequential) TPU grid — the same
-"partial histograms added bin-by-bin" the paper uses across CPU+GPU.
+slice via a one-hot reduction (MXU/VPU-friendly), and partials
+accumulate into the output block across the (sequential) TPU grid — the
+same "partial histograms added bin-by-bin" the paper uses across
+CPU+GPU.
 
-VMEM budget (v5e ~16 MiB/core): tile (TILE,) i32 4·TILE bytes + one-hot
-(TILE, bins) f32.  TILE=2048, bins<=1024 -> ~8.4 MiB.  OK.
+Bin blocking: the (TILE, n_bins) one-hot intermediate is the VMEM
+limiter, so the grid is (bin_blocks, tiles) — bin block outermost so
+each output block's accumulation visits are consecutive (the TPU
+revisiting rule) — and each step materializes only (tile, bin_block).
+Tunable knobs (kernels/autotune.py): tile, bin_block (0 -> all bins),
+acc_dtype ("int32" sums on the VPU, "float32" opens the MXU path).
+
+``hist_sort_xla`` (sort + searchsorted) and ``hist_host`` (np.bincount
+behind pure_callback — the paper's CPU-side path) are the non-Pallas
+candidates the autotuner ranks per backend; XLA's scatter-add bincount
+lives in ref.py as the oracle.
 """
 from __future__ import annotations
 
@@ -16,40 +26,74 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
 
-def _hist_kernel(x_ref, o_ref, *, n_bins: int):
-    step = pl.program_id(0)
 
-    @pl.when(step == 0)
+def _hist_kernel(x_ref, o_ref, *, bin_block: int, acc_dtype):
+    j = pl.program_id(0)                            # bin block (outer)
+    i = pl.program_id(1)                            # data tile (inner)
+
+    @pl.when(i == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
     x = x_ref[...]                                  # (tile,) int32
-    # one-hot matmul: rows -> bins (no atomics on TPU)
-    oh = (x[:, None] == jnp.arange(n_bins, dtype=jnp.int32)[None, :])
-    partial = jnp.sum(oh.astype(jnp.int32), axis=0)
-    o_ref[...] += partial
+    base = j * bin_block
+    bins = base + jax.lax.broadcasted_iota(jnp.int32, (1, bin_block), 1)
+    oh = (x[:, None] == bins)                       # (tile, bin_block)
+    partial = jnp.sum(oh.astype(acc_dtype), axis=0)
+    o_ref[...] += partial.astype(jnp.int32)
 
 
 def hist_pallas(x: jnp.ndarray, n_bins: int, *, tile: int = 2048,
-                interpret: bool = True) -> jnp.ndarray:
+                bin_block: int = 0, acc_dtype: str = "int32",
+                interpret: bool | None = None) -> jnp.ndarray:
     """x: (N,) int32 in [0, n_bins). Returns (n_bins,) int32 counts."""
+    interpret = resolve_interpret(interpret)
+    acc_dtype = jnp.dtype(acc_dtype)
     n = x.shape[0]
+    tile = min(tile, max(n, 1))
+    bin_block = n_bins if bin_block <= 0 else min(bin_block, n_bins)
     pad = (-n) % tile
     if pad:
         # pad with bin 0 and subtract the padding afterwards
         x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
-    grid = (x.shape[0] // tile,)
+    pad_b = (-n_bins) % bin_block
+    nbp = n_bins + pad_b
+    grid = (nbp // bin_block, x.shape[0] // tile)
     out = pl.pallas_call(
-        functools.partial(_hist_kernel, n_bins=n_bins),
+        functools.partial(_hist_kernel, bin_block=bin_block,
+                          acc_dtype=acc_dtype),
         grid=grid,
-        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
-        out_specs=pl.BlockSpec((n_bins,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((n_bins,), jnp.int32),
+        in_specs=[pl.BlockSpec((tile,), lambda j, i: (i,))],
+        out_specs=pl.BlockSpec((bin_block,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((nbp,), jnp.int32),
         interpret=interpret,
     )(x.astype(jnp.int32))
+    out = out[:n_bins]
     if pad:
         out = out.at[0].add(-pad)
     return out
+
+
+def hist_sort_xla(x: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """Sort + searchsorted: counts are the differences of bin-edge
+    insertion points (no scatter)."""
+    xs = jnp.sort(x.astype(jnp.int32))
+    edges = jnp.searchsorted(xs, jnp.arange(n_bins + 1, dtype=jnp.int32))
+    return jnp.diff(edges).astype(jnp.int32)
+
+
+def hist_host(x: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """np.bincount on the host behind pure_callback — the paper's
+    CPU-side partial-histogram path as a tunable candidate."""
+    def _cb(xv):
+        return np.bincount(
+            np.asarray(xv).ravel(), minlength=n_bins)[:n_bins].astype(
+                np.int32)
+    return jax.pure_callback(
+        _cb, jax.ShapeDtypeStruct((n_bins,), jnp.int32), x,
+        vmap_method="sequential")

@@ -1,21 +1,77 @@
-"""Jitted public wrapper for the histogram kernel."""
+"""Jitted public wrapper for the histogram kernel, with autotuned configs."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import default_interpret
-from repro.kernels.hist.hist import hist_pallas
+from repro.kernels.autotune import (Config, autotune, bucket,
+                                    default_config, freeze)
+from repro.kernels.hist.hist import hist_host, hist_pallas, hist_sort_xla
 from repro.kernels.hist.ref import hist_ref
 
+# Seed constants (PR 1): one-hot against ALL bins per 2048-wide tile.
+SEED_CONFIG: Config = {"impl": "pallas", "tile": 2048, "bin_block": 0,
+                       "acc_dtype": "int32"}
+# Default when search is disabled: XLA bincount (the oracle path).
+DEFAULT_CONFIG: Config = {"impl": "xla_bincount", "tile": 2048,
+                          "bin_block": 0, "acc_dtype": "int32"}
 
-@functools.partial(jax.jit, static_argnames=("n_bins", "use_kernel", "tile"))
+
+def candidates(n: int, n_bins: int):
+    cands = [{"impl": "xla_bincount"}, {"impl": "xla_sort"},
+             {"impl": "host_bincount"}]
+    for tile in (2048, 8192):
+        for bb in (0, 128):
+            if bb and bb >= n_bins:
+                continue
+            for acc in ("int32", "float32"):
+                cands.append({"impl": "pallas", "tile": tile,
+                              "bin_block": bb, "acc_dtype": acc})
+    return cands
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "cfg"))
+def _hist_cfg(x, n_bins: int, cfg):
+    c = dict(cfg)
+    impl = c.get("impl", "pallas")
+    if impl == "xla_bincount":
+        return hist_ref(x, n_bins)
+    if impl == "xla_sort":
+        return hist_sort_xla(x, n_bins)
+    if impl == "host_bincount":
+        return hist_host(x, n_bins)
+    return hist_pallas(x, n_bins, tile=int(c.get("tile", 2048)),
+                       bin_block=int(c.get("bin_block", 0)),
+                       acc_dtype=str(c.get("acc_dtype", "int32")))
+
+
+def shape_bucket(n: int, n_bins: int) -> str:
+    return f"N{bucket(n)}_B{n_bins}"
+
+
+def tuned_config(x, n_bins: int) -> Config:
+    n = int(x.size)
+    xf = x.reshape(-1)
+    return autotune(
+        "hist", shape_bucket(n, n_bins), candidates(n, n_bins),
+        lambda cfg: lambda: _hist_cfg(xf, n_bins, freeze(cfg)),
+        default_config(SEED_CONFIG, DEFAULT_CONFIG))
+
+
 def histogram(x: jnp.ndarray, n_bins: int, *, use_kernel: bool = True,
-              tile: int = 2048) -> jnp.ndarray:
-    """Histogram of int values in [0, n_bins)."""
-    if use_kernel:
-        return hist_pallas(x.reshape(-1), n_bins, tile=tile,
-                           interpret=default_interpret())
-    return hist_ref(x.reshape(-1), n_bins)
+              config: Optional[Config] = None,
+              tile: Optional[int] = None) -> jnp.ndarray:
+    """Histogram of int values in [0, n_bins); config=None -> autotuned,
+    explicit ``tile`` forces the Pallas path with that tiling."""
+    xf = x.reshape(-1)
+    if not use_kernel:
+        return _hist_cfg(xf, n_bins, freeze({"impl": "xla_bincount"}))
+    if config is None:
+        if tile is not None:
+            config = {**SEED_CONFIG, "tile": tile}
+        else:
+            config = tuned_config(xf, n_bins)
+    return _hist_cfg(xf, n_bins, freeze(config))

@@ -1,18 +1,65 @@
-"""Jitted public wrapper for the bitonic row sorter."""
+"""Jitted public wrapper for the bitonic row sorter, autotuned."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
-from repro.kernels.common import default_interpret
+from repro.kernels.autotune import (Config, autotune, bucket,
+                                    default_config, freeze)
 from repro.kernels.sort_bitonic.ref import sort_rows_ref
-from repro.kernels.sort_bitonic.sort_bitonic import sort_rows_pallas
+from repro.kernels.sort_bitonic.sort_bitonic import (bitonic_rows_xla,
+                                                     sort_rows_pallas)
+
+# Seed constants (PR 1).
+SEED_CONFIG: Config = {"impl": "pallas", "row_tile": 256}
+# Default when search is disabled: the backend's native sort.
+DEFAULT_CONFIG: Config = {"impl": "xla_sort", "row_tile": 256}
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "row_tile"))
-def sort_rows(x, *, use_kernel: bool = True, row_tile: int = 256):
-    if use_kernel:
-        return sort_rows_pallas(x, row_tile=row_tile,
-                                interpret=default_interpret())
-    return sort_rows_ref(x)
+def candidates(G: int, L: int):
+    cands = [{"impl": "xla_sort"}, {"impl": "xla_bitonic"}]
+    for rt in (64, 128, 256, 512):
+        if rt > max(G, 64) * 2:
+            continue
+        cands.append({"impl": "pallas", "row_tile": rt})
+    return cands
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _sort_cfg(x, cfg):
+    c = dict(cfg)
+    impl = c.get("impl", "pallas")
+    if impl == "xla_sort":
+        return sort_rows_ref(x)
+    if impl == "xla_bitonic":
+        return bitonic_rows_xla(x)
+    return sort_rows_pallas(x, row_tile=int(c.get("row_tile", 256)))
+
+
+def shape_bucket(G: int, L: int) -> str:
+    return f"G{bucket(G)}_L{L}"
+
+
+def tuned_config(x) -> Config:
+    G, L = x.shape
+    return autotune(
+        "sort_bitonic", shape_bucket(G, L), candidates(G, L),
+        lambda cfg: lambda: _sort_cfg(x, freeze(cfg)),
+        default_config(SEED_CONFIG, DEFAULT_CONFIG))
+
+
+def sort_rows(x, *, use_kernel: bool = True,
+              config: Optional[Config] = None,
+              row_tile: Optional[int] = None):
+    """Row-wise ascending sort; config=None -> autotuned, explicit
+    ``row_tile`` forces the Pallas path with that tiling."""
+    if not use_kernel:
+        return _sort_cfg(x, freeze({"impl": "xla_sort"}))
+    if config is None:
+        if row_tile is not None:
+            config = {"impl": "pallas", "row_tile": row_tile}
+        else:
+            config = tuned_config(x)
+    return _sort_cfg(x, freeze(config))

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _bitonic_rows(x: jnp.ndarray) -> jnp.ndarray:
     """Sort each row ascending; L = power of two (static unrolled net).
@@ -43,15 +45,24 @@ def _bitonic_rows(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
+def bitonic_rows_xla(x: jnp.ndarray) -> jnp.ndarray:
+    """The same compare-exchange network as a plain XLA program over the
+    whole array — the untiled candidate the autotuner ranks against the
+    Pallas row tiles (and against the backend's native sort)."""
+    return _bitonic_rows(x)
+
+
 def _sort_kernel(x_ref, o_ref):
     o_ref[...] = _bitonic_rows(x_ref[...])
 
 
 def sort_rows_pallas(x: jnp.ndarray, *, row_tile: int = 256,
-                     interpret: bool = True) -> jnp.ndarray:
+                     interpret: bool | None = None) -> jnp.ndarray:
     """Sort each row of (G, L) ascending; L must be a power of two."""
+    interpret = resolve_interpret(interpret)
     G, L = x.shape
     assert (L & (L - 1)) == 0, f"L={L} must be a power of two"
+    row_tile = min(row_tile, max(G, 1))
     pad = (-G) % row_tile
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))

@@ -9,15 +9,58 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.common import default_interpret
+from repro.kernels.autotune import (Config, autotune, bucket,
+                                    default_config, freeze)
 from repro.kernels.spmv.spmv import spmv_ell_pallas
 from repro.kernels.spmv.ref import spmv_coo_ref, spmv_ell_ref
+
+# Seed constants (PR 1) / safe default when search is disabled.
+SEED_CONFIG: Config = {"impl": "pallas", "row_tile": 256}
+DEFAULT_CONFIG: Config = {"impl": "xla_ell", "row_tile": 256}
+
+
+def candidates(R: int, K: int):
+    cands = [{"impl": "xla_ell"}]
+    for rt in (128, 256, 512):
+        if rt > max(R, 128) * 2:
+            continue
+        cands.append({"impl": "pallas", "row_tile": rt})
+    return cands
+
+
+def shape_bucket(R: int, K: int) -> str:
+    return f"R{bucket(R)}_K{bucket(K)}"
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _ell_cfg(vals, idx, x, cfg):
+    c = dict(cfg)
+    if c.get("impl", "pallas") == "xla_ell":
+        return spmv_ell_ref(vals, idx, x)
+    return spmv_ell_pallas(vals, idx, x,
+                           row_tile=int(c.get("row_tile", 256)))
+
+
+def tuned_config(vals, idx, x) -> Config:
+    R, K = vals.shape
+    return autotune(
+        "spmv", shape_bucket(R, K), candidates(R, K),
+        lambda cfg: lambda: _ell_cfg(vals, idx, x, freeze(cfg)),
+        default_config(SEED_CONFIG, DEFAULT_CONFIG))
+
+
+def spmv_ell(vals, idx, x, *, config: Optional[Config] = None):
+    """ELL spmv with an autotuned implementation (config=None ->
+    per-backend tuned)."""
+    if config is None:
+        config = tuned_config(vals, idx, x)
+    return _ell_cfg(vals, idx, x, freeze(config))
 
 
 @dataclass
@@ -61,21 +104,24 @@ def prepare(dense: np.ndarray, k_threshold: int = 32) -> BinnedCSR:
                      R, C)
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "n_rows"))
+@functools.partial(jax.jit, static_argnames=("n_rows", "cfg"))
 def _spmv_binned(ell_vals, ell_idx, ell_rows, coo_rows, coo_cols, coo_vals,
-                 x, n_rows: int, use_kernel: bool = True):
-    if use_kernel:
-        y_dense = spmv_ell_pallas(ell_vals, ell_idx, x,
-                                  interpret=default_interpret())
-    else:
-        y_dense = spmv_ell_ref(ell_vals, ell_idx, x)
+                 x, n_rows: int, cfg):
+    y_dense = _ell_cfg(ell_vals, ell_idx, x, cfg)
     y = jnp.zeros((n_rows,), x.dtype).at[ell_rows].set(y_dense)
     if coo_vals.shape[0]:
         y = y + spmv_coo_ref(coo_rows, coo_cols, coo_vals, x, n_rows)
     return y
 
 
-def spmv(m: BinnedCSR, x: jnp.ndarray, use_kernel: bool = True
-         ) -> jnp.ndarray:
+def spmv(m: BinnedCSR, x: jnp.ndarray, use_kernel: bool = True,
+         config: Optional[Config] = None) -> jnp.ndarray:
+    """Binned spmv: ELL head via the tuned (config=None -> autotuned)
+    implementation, COO tail via segment-sum."""
+    if not use_kernel:
+        config = {"impl": "xla_ell"}
+    elif config is None:
+        config = tuned_config(m.ell_vals, m.ell_idx, x)
     return _spmv_binned(m.ell_vals, m.ell_idx, m.ell_rows, m.coo_rows,
-                        m.coo_cols, m.coo_vals, x, m.n_rows, use_kernel)
+                        m.coo_cols, m.coo_vals, x, m.n_rows,
+                        freeze(config))

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _spmv_kernel(vals_ref, idx_ref, x_ref, o_ref):
     vals = vals_ref[...]                       # (TR, K)
@@ -33,10 +35,14 @@ def _spmv_kernel(vals_ref, idx_ref, x_ref, o_ref):
 
 
 def spmv_ell_pallas(vals: jnp.ndarray, idx: jnp.ndarray, x: jnp.ndarray,
-                    *, row_tile: int = 256, interpret: bool = True
+                    *, row_tile: int = 256, interpret: bool | None = None
                     ) -> jnp.ndarray:
-    """ELL spmv: vals/idx (R, K) with zero-padding, x (C,). Returns (R,)."""
+    """ELL spmv: vals/idx (R, K) with zero-padding, x (C,). Returns (R,).
+
+    Tunable knob (kernels/autotune.py): row_tile."""
+    interpret = resolve_interpret(interpret)
     R, K = vals.shape
+    row_tile = min(row_tile, max(R, 1))
     pad = (-R) % row_tile
     if pad:
         vals = jnp.pad(vals, ((0, pad), (0, 0)))

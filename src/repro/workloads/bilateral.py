@@ -5,44 +5,18 @@ trick) while the accelerator is still busy; rows are then work-shared.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.host_offload import HostTaskPool, bilateral_luts
 from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
-from repro.kernels.bilateral.bilateral import bilateral_pallas
-from repro.kernels.bilateral.ref import bilateral_ref
-from repro.kernels.common import default_interpret
+from repro.kernels.bilateral.ops import bilateral_filter, tuned_config
 
 
 def make_inputs(size: int = 512, seed: int = 0):
     rng = np.random.default_rng(seed)
     return jnp.asarray(
         (rng.random((size, size)) * 255).astype(np.float32))
-
-
-@functools.partial(jax.jit, static_argnames=("radius",))
-def _lut_filter(block, sp, rl, radius):
-    """Jitted LUT-based filter — the accel measured path.  Module-level
-    so the compile cache persists across calls (a per-call jit closure
-    used to recompile every chunk shape on every call)."""
-    K_ = 2 * radius + 1
-    Hb, Wb = block.shape
-    padded = jnp.pad(block, radius, mode="edge")
-    num = jnp.zeros_like(block)
-    den = jnp.zeros_like(block)
-    for di in range(K_):
-        for dj in range(K_):
-            nb = padded[di:di + Hb, dj:dj + Wb]
-            q = jnp.clip(jnp.abs(nb - block).astype(jnp.int32), 0,
-                         rl.shape[0] - 1)
-            wgt = sp[di, dj] * jnp.take(rl, q)
-            num += wgt * nb
-            den += wgt
-    return num / jnp.maximum(den, 1e-12)
 
 
 def run_hybrid(ex: HybridExecutor, size: int = 512, sigma_s: float = 3.0,
@@ -57,21 +31,16 @@ def run_hybrid(ex: HybridExecutor, size: int = 512, sigma_s: float = 3.0,
     sp, rl = fut.result()
     sp, rl = jnp.asarray(sp), jnp.asarray(rl)
 
-    # comparable measured paths (kernel-in-interpret would distort the
-    # timing model off-TPU; the kernel is validated in tests)
-    use_k = jax.default_backend() == "tpu"
+    # Both groups run the same autotuned LUT filter (comparable measured
+    # paths; heterogeneity is modeled by the slowdown factor).  Config
+    # resolved once, outside the calibrated/timed path.
+    cfg = tuned_config(img, sp, rl)
 
     def run_share(group, start, n):
         lo = max(0, start - radius)
         hi = min(H, start + n + radius)
         block = img[lo:hi]
-        if group == "accel" and use_k:
-            out = bilateral_pallas(block, sp, rl,
-                                   interpret=default_interpret())
-        else:
-            # both measured paths use the jitted LUT filter; group
-            # heterogeneity is modeled by the slowdown factor
-            out = _lut_filter(block, sp, rl, radius)
+        out = bilateral_filter(block, sp, rl, config=cfg)
         out = out[start - lo:start - lo + n]
         out.block_until_ready()
         return out

@@ -34,15 +34,18 @@ def _bin_data(x: jnp.ndarray, n_bins: int):
     return sorted_by_bin, counts, starts
 
 
-def leaf_sort_bitonic(chunk: jnp.ndarray, tile: int = 1024) -> jnp.ndarray:
-    """TPU-target leaf sorter: bitonic row tiles + final merge.  Used on
-    real TPUs; the benchmark measurement path below uses jnp/np sorts so
-    interpret-mode kernel overhead doesn't distort the hybrid timing
-    model (the kernel itself is validated against ref in tests)."""
+def leaf_sort_bitonic(chunk: jnp.ndarray, tile: int = 1024,
+                      config=None) -> jnp.ndarray:
+    """TPU-target leaf sorter: bitonic row tiles + final merge, with the
+    row sorter autotuned (config=None -> per-backend tuned row_tile /
+    implementation).  Used on real TPUs; the benchmark measurement path
+    below uses jnp/np sorts so kernel overhead doesn't distort the
+    hybrid timing model (the kernel itself is validated against ref in
+    tests)."""
     n = chunk.shape[0]
     pad = (-n) % tile
     padded = jnp.concatenate([chunk, jnp.full((pad,), jnp.inf, chunk.dtype)])
-    rows = sort_rows(padded.reshape(-1, tile))
+    rows = sort_rows(padded.reshape(-1, tile), config=config)
     return jnp.sort(rows.reshape(-1))[:n]
 
 

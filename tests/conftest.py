@@ -1,6 +1,18 @@
 import os
 import sys
+import tempfile
 
 # tests run against the source tree; 1 CPU device (no fake-device flags
 # here — only launch/dryrun.py uses the 512-device override)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Kernel autotune search is disabled for the suite (workloads use the
+# deterministic default configs; timing-based search under test load is
+# noise anyway) and the cache is pointed at a throwaway path so tests
+# never read or write ~/.cache/repro/autotune.json.  test_autotune.py
+# re-enables search per-test with an injected timer.
+os.environ.setdefault("REPRO_AUTOTUNE", "0")
+os.environ.setdefault(
+    "REPRO_TUNE_CACHE",
+    os.path.join(tempfile.mkdtemp(prefix="repro-tune-test-"),
+                 "autotune.json"))

@@ -1,0 +1,277 @@
+"""Autotune subsystem: search determinism (seeded timer stub), cache
+round-trip through the JSON file, env escape hatches, and tuned-vs-
+reference numerical parity for every kernel across a shape sweep
+(including non-multiple-of-tile shapes exercising the padding paths)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune as at
+
+KEY = jax.random.key(0)
+
+
+@pytest.fixture
+def tune_env(tmp_path, monkeypatch):
+    """Fresh cache file + search enabled, isolated from the suite-wide
+    REPRO_AUTOTUNE=0 / throwaway-cache conftest settings."""
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(path))
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    at.reset_tune_cache()
+    yield path
+    at.reset_tune_cache()
+
+
+def _stub_timer(seed):
+    """Deterministic fake timer: the i-th timed candidate always gets
+    the i-th value of a seeded stream."""
+    rng = np.random.default_rng(seed)
+    return lambda fn: float(rng.random())
+
+
+CANDS = [{"impl": "a"}, {"impl": "b"}, {"impl": "c"}, {"impl": "d"}]
+DEFAULT = {"impl": "a", "tile": 1}
+
+
+def _noop_maker(cfg):
+    return lambda: None
+
+
+# ------------------------------------------------------------- search
+def test_search_determinism(tune_env, tmp_path, monkeypatch):
+    cfg1 = at.autotune("k", "s", CANDS, _noop_maker, DEFAULT,
+                       timer=_stub_timer(7))
+    # same candidates + same seeded timer on a fresh cache -> same pick
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "other.json"))
+    at.reset_tune_cache()
+    cfg2 = at.autotune("k", "s", CANDS, _noop_maker, DEFAULT,
+                       timer=_stub_timer(7))
+    assert cfg1 == cfg2
+    # and the pick is the argmin of the stub stream
+    rng = np.random.default_rng(7)
+    times = rng.random(len(CANDS))
+    want = {**DEFAULT, **CANDS[int(np.argmin(times))]}
+    assert cfg1 == want
+
+
+def test_search_skips_failing_candidates(tune_env):
+    def maker(cfg):
+        if cfg["impl"] in ("a", "c"):
+            raise ValueError("unsupported tiling")
+        return lambda: None
+    times = iter([0.5, 0.1])                  # b, d
+    cfg = at.autotune("k", "s", CANDS, maker, DEFAULT,
+                      timer=lambda fn: next(times))
+    assert cfg["impl"] == "d"
+
+
+def test_search_all_failing_falls_back_to_default(tune_env):
+    def maker(cfg):
+        raise ValueError("nope")
+    cfg = at.autotune("k", "s", CANDS, maker, DEFAULT)
+    assert cfg == DEFAULT
+    # a fully-failed search is not cached
+    assert at.get_tune_cache().get(jax.default_backend(), "k", "s") is None
+
+
+# -------------------------------------------------------------- cache
+def test_cache_roundtrip_through_file(tune_env):
+    calls = []
+
+    def timer(fn):
+        calls.append(1)
+        return 0.1 * (len(calls))             # first candidate wins
+
+    cfg1 = at.autotune("k", "s", CANDS, _noop_maker, DEFAULT, timer=timer)
+    assert len(calls) == len(CANDS)
+    # file round-trip: drop all in-memory state, hit the JSON file
+    data = json.loads(tune_env.read_text())
+    backend = jax.default_backend()
+    assert data[backend]["k"]["s"]["config"] == cfg1
+    assert data[backend]["k"]["s"]["us"] > 0
+    at.reset_tune_cache()
+    cfg2 = at.autotune("k", "s", CANDS, _noop_maker, DEFAULT, timer=timer)
+    assert cfg2 == cfg1 and len(calls) == len(CANDS)   # no re-search
+
+
+def test_cache_distinct_buckets_and_kernels(tune_env):
+    t = iter(range(1, 100))
+    timer = lambda fn: float(next(t))
+    at.autotune("k1", "s1", CANDS, _noop_maker, DEFAULT, timer=timer)
+    at.autotune("k1", "s2", CANDS[:2], _noop_maker, DEFAULT, timer=timer)
+    at.autotune("k2", "s1", CANDS[:2], _noop_maker, DEFAULT, timer=timer)
+    cache = at.get_tune_cache()
+    b = jax.default_backend()
+    assert cache.get(b, "k1", "s1") and cache.get(b, "k1", "s2")
+    assert cache.get(b, "k2", "s1") and cache.get(b, "k2", "s3") is None
+
+
+def test_corrupt_cache_file_degrades_gracefully(tune_env):
+    tune_env.write_text("{not json")
+    at.reset_tune_cache()
+    cfg = at.autotune("k", "s", CANDS, _noop_maker, DEFAULT,
+                      timer=_stub_timer(0))
+    assert cfg["impl"] in {c["impl"] for c in CANDS}
+    # the rewrite repaired the file
+    assert json.loads(tune_env.read_text())
+
+
+# ---------------------------------------------------- escape hatches
+def test_disable_env_returns_default(tune_env, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    boom = lambda fn: pytest.fail("search ran while disabled")
+    cfg = at.autotune("k", "s", CANDS, _noop_maker, DEFAULT, timer=boom)
+    assert cfg == DEFAULT
+
+
+def test_pin_env_overrides_search_and_cache(tune_env, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_PIN_K", '{"impl": "pinned"}')
+    boom = lambda fn: pytest.fail("search ran while pinned")
+    cfg = at.autotune("k", "s", CANDS, _noop_maker, DEFAULT, timer=boom)
+    assert cfg == {**DEFAULT, "impl": "pinned"}   # merged over default
+
+
+# ----------------------------------------------- ops-level integration
+def test_ops_level_tuned_config_searches_once(tune_env):
+    from repro.kernels.conv2d import ops as conv_ops
+    img = jax.random.normal(KEY, (16, 16))
+    w = jax.random.normal(jax.random.key(1), (3, 3))
+    calls = []
+    prev = at.set_timer(lambda fn: (calls.append(1), float(len(calls)))[1])
+    try:
+        cfg1 = conv_ops.tuned_config(img, w)
+        n_search = len(calls)
+        assert n_search > 0
+        cfg2 = conv_ops.tuned_config(img, w)          # cache hit
+    finally:
+        at.set_timer(prev)
+    assert cfg1 == cfg2 and len(calls) == n_search
+    out = conv_ops.conv2d(img, w, config=cfg1)
+    ref = conv_ops.conv2d(img, w, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------- tuned-vs-reference parity sweep
+CONV_CFGS = [{"impl": "xla_shift"},
+             {"impl": "pallas", "row_tile": 32, "col_tile": 48},
+             {"impl": "pallas", "row_tile": 64, "col_tile": 0}]
+
+
+@pytest.mark.parametrize("H,W,K", [(50, 70, 15), (64, 48, 3), (33, 100, 5)])
+def test_conv2d_config_parity(H, W, K):
+    from repro.kernels.conv2d import ops
+    from repro.kernels.conv2d.ref import conv2d_ref
+    img = jax.random.normal(KEY, (H, W), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (K, K), jnp.float32)
+    ref = np.asarray(conv2d_ref(img, w))
+    for cfg in CONV_CFGS:
+        np.testing.assert_allclose(
+            np.asarray(ops.conv2d(img, w, config=cfg)), ref,
+            rtol=2e-4, atol=2e-4, err_msg=str(cfg))
+
+
+HIST_CFGS = [
+    {"impl": "pallas", "tile": 512, "bin_block": 32, "acc_dtype": "float32"},
+    {"impl": "pallas", "tile": 256, "bin_block": 0, "acc_dtype": "int32"},
+    {"impl": "xla_sort"}, {"impl": "host_bincount"},
+    {"impl": "xla_bincount"}]
+
+
+@pytest.mark.parametrize("n,bins", [(1000, 16), (4097, 100), (257, 7)])
+def test_hist_config_parity(n, bins):
+    from repro.kernels.hist import ops
+    x = jax.random.randint(KEY, (n,), 0, bins)
+    ref = np.asarray(ops.histogram(x, bins, use_kernel=False))
+    assert ref.sum() == n
+    for cfg in HIST_CFGS:
+        np.testing.assert_array_equal(
+            np.asarray(ops.histogram(x, bins, config=cfg)), ref,
+            err_msg=str(cfg))
+
+
+ATTN_CFGS = [{"impl": "pallas", "block_q": 64, "block_k": 64},
+             {"impl": "pallas", "block_q": 32, "block_k": 128},
+             {"impl": "xla_blocked", "block_q": 64}]
+
+
+@pytest.mark.parametrize("T,causal", [(100, True), (128, True), (96, False)])
+def test_attention_config_parity(T, causal):
+    """T=100/96 are non-multiples of every block size: padding paths."""
+    from repro.kernels.flash_attention import ops
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, T, 4, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, T, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, T, 2, 32), jnp.float32)
+    ref = np.asarray(ops.flash_attention(q, k, v, causal=causal,
+                                         use_kernel=False))
+    for cfg in ATTN_CFGS:
+        np.testing.assert_allclose(
+            np.asarray(ops.flash_attention(q, k, v, causal=causal,
+                                           config=cfg)),
+            ref, rtol=2e-5, atol=2e-5, err_msg=str(cfg))
+
+
+SORT_CFGS = [{"impl": "pallas", "row_tile": 32}, {"impl": "xla_bitonic"},
+             {"impl": "xla_sort"}]
+
+
+@pytest.mark.parametrize("G,L", [(33, 64), (70, 128)])
+def test_sort_config_parity(G, L):
+    from repro.kernels.sort_bitonic import ops
+    x = jax.random.normal(KEY, (G, L), jnp.float32)
+    ref = np.sort(np.asarray(x), axis=1)
+    for cfg in SORT_CFGS:
+        np.testing.assert_array_equal(
+            np.asarray(ops.sort_rows(x, config=cfg)), ref,
+            err_msg=str(cfg))
+
+
+GMM_CFGS = [
+    {"impl": "pallas", "tile_c": 64, "tile_f": 64, "tile_d": 32},
+    {"impl": "pallas", "tile_c": 128, "tile_f": 128, "tile_d": 128,
+     "acc_dtype": "float32"}]
+
+
+@pytest.mark.parametrize("E,C,D,F", [(2, 100, 96, 80), (4, 64, 32, 48)])
+def test_gmm_config_parity(E, C, D, F):
+    from repro.kernels.gmm import ops
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (E, C, D), jnp.float32)
+    w = jax.random.normal(ks[1], (E, D, F), jnp.float32)
+    ref = np.asarray(ops.gmm(x, w, use_kernel=False))
+    for cfg in GMM_CFGS:
+        np.testing.assert_allclose(np.asarray(ops.gmm(x, w, config=cfg)),
+                                   ref, rtol=2e-4, atol=2e-4,
+                                   err_msg=str(cfg))
+
+
+@pytest.mark.parametrize("R,C,K", [(100, 80, 8), (33, 100, 4)])
+def test_spmv_config_parity(R, C, K):
+    from repro.kernels.spmv import ops
+    ks = jax.random.split(KEY, 3)
+    vals = jax.random.normal(ks[0], (R, K), jnp.float32)
+    idx = jax.random.randint(ks[1], (R, K), 0, C)
+    x = jax.random.normal(ks[2], (C,), jnp.float32)
+    ref = np.asarray(ops.spmv_ell(vals, idx, x,
+                                  config={"impl": "xla_ell"}))
+    for rt in (64, 128):
+        np.testing.assert_allclose(
+            np.asarray(ops.spmv_ell(vals, idx, x,
+                                    config={"impl": "pallas",
+                                            "row_tile": rt})),
+            ref, rtol=2e-5, atol=2e-5)
+
+
+def test_bilateral_config_parity():
+    from repro.kernels.bilateral import ops
+    img = (jax.random.uniform(KEY, (50, 48)) * 255).astype(jnp.float32)
+    ref = np.asarray(ops.bilateral(img, 2.0, 25.0, 2, use_kernel=False))
+    for cfg in ({"impl": "pallas", "row_tile": 16}, {"impl": "xla_lut"}):
+        np.testing.assert_allclose(
+            np.asarray(ops.bilateral(img, 2.0, 25.0, 2, config=cfg)),
+            ref, rtol=1e-3, atol=1e-3, err_msg=str(cfg))

@@ -10,6 +10,13 @@ Three wall-clock numbers (steady state, warm calibration cache):
   async    — the chunk-pipelined executor (threads on multi-device,
              virtual clocks on one device).
 
+The chunk grid is sized from a *measured* per-image conv time: after
+the PR-2 autotuner made conv ~20x faster, a fixed 16-chunk grid left
+~40 us of work per chunk — far below thread-coordination cost, so the
+async/seq1x ratio drifted above 1.  Chunks are now cut so each carries
+at least ``target_chunk_us`` of measured work (and the default image is
+the paper's Fig-4 scale), which restores a real overlap ratio.
+
 Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` (or on
 any genuinely multi-device host) for real thread overlap:
 
@@ -19,11 +26,14 @@ from __future__ import annotations
 
 import argparse
 import json
+import threading
 import time
 
 import jax
 
+from repro.core.calibration import measure
 from repro.core.hybrid_executor import HybridExecutor
+from repro.kernels.conv2d.ops import conv2d, tuned_config
 from repro.workloads import conv
 
 
@@ -33,9 +43,67 @@ def _wall(fn):
     return time.perf_counter() - t0, out
 
 
-def run(size: int = 512, ksize: int = 9, json_out: bool = False):
-    ex = HybridExecutor()
-    # warm: compile every chunk shape, fill the calibration cache
+def concurrency_capacity(size: int, ksize: int, cfg,
+                         t_serial: float) -> float:
+    """Total conv throughput of two concurrent device-pinned streams
+    relative to one stream (2.0 = perfect parallel headroom, 1.0 =
+    fully contended), given the single-stream time ``scaled_chunks``
+    already measured.  The tuned kernels are internally multi-threaded,
+    so on a low-core host two streams share the same cores and the
+    *achievable* async/seq1x ratio is bounded by 1/capacity — the
+    bench reports that floor so the ratio is interpretable across
+    hosts."""
+    img, w = conv.make_inputs(size, ksize)
+
+    def one():
+        jax.block_until_ready(conv2d(img, w, config=cfg))
+
+    devs = jax.devices()
+
+    def worker(dev):
+        ctx = jax.default_device(dev)
+        with ctx:
+            for _ in range(2):
+                one()
+
+    pair = [devs[0], devs[1 % len(devs)]]
+    for d in pair:                       # warm per-device executables
+        with jax.default_device(d):
+            one()
+    t0 = time.perf_counter()
+    ts = [threading.Thread(target=worker, args=(d,)) for d in pair]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    elapsed = time.perf_counter() - t0
+    return max(4.0 * t_serial / max(elapsed, 1e-9), 1e-3)
+
+
+def scaled_chunks(size: int, ksize: int, target_chunk_us: float = 3000.0,
+                  lo: int = 2, hi: int = 32):
+    """Chunk count such that each chunk carries >= target_chunk_us of
+    measured tuned-conv work (ROADMAP: 'chunk count scaled to measured
+    per-chunk cost').  Resolves the tuned config as a side effect, so
+    the search stays out of every timed section below.  Returns
+    (n_chunks, t_img, cfg) so callers reuse the measurement."""
+    img, w = conv.make_inputs(size, ksize)
+    cfg = tuned_config(img, w)
+    t_img = measure(lambda: conv2d(img, w, config=cfg), warmup=1, iters=3,
+                    reduce="min")
+    n = int(max(lo, min(hi, (t_img * 1e6) / max(target_chunk_us, 1.0))))
+    return n, t_img, cfg
+
+
+def run(size: int = 2048, ksize: int = 15, json_out: bool = False,
+        target_chunk_us: float = 3000.0):
+    n_chunks, t_img, cfg = scaled_chunks(size, ksize, target_chunk_us)
+    capacity = concurrency_capacity(size, ksize, cfg, t_img)
+    floor = 1.0 / capacity
+    ex = HybridExecutor(n_chunks=n_chunks)
+    # warm: compile every chunk shape, fill the calibration cache, let
+    # the EWMA plan converge (two async rounds)
+    conv.run_hybrid(ex, size=size, ksize=ksize)
     conv.run_hybrid(ex, size=size, ksize=ksize)
     conv.run_hybrid(ex, size=size, ksize=ksize, sequential=True)
 
@@ -60,8 +128,10 @@ def run(size: int = 512, ksize: int = 9, json_out: bool = False):
         f"seed_semantics_3x_execution",
         f"overlap/seq1x_wall,{t_seq * 1e6:.0f},serial_each_chunk_once",
         f"overlap/async_wall,{t_async * 1e6:.0f},mode={mode}|"
-        f"steals={out_async.trace.steals}|n_devices={n_dev}",
-        f"overlap/ratio_vs_seq1x,{1e6 * r_seq:.0f},ratio={r_seq:.3f}",
+        f"steals={out_async.trace.steals}|n_devices={n_dev}|"
+        f"n_chunks={n_chunks}",
+        f"overlap/ratio_vs_seq1x,{1e6 * r_seq:.0f},ratio={r_seq:.3f}|"
+        f"floor={floor:.2f}|capacity={capacity:.2f}x",
         f"overlap/ratio_vs_legacy3x,{1e6 * r_legacy:.0f},"
         f"ratio={r_legacy:.3f}|target<0.75",
     ]
@@ -70,7 +140,9 @@ def run(size: int = 512, ksize: int = 9, json_out: bool = False):
     result = {"legacy3x_wall": t_legacy, "seq1x_wall": t_seq,
               "async_wall": t_async, "ratio_vs_seq1x": r_seq,
               "ratio_vs_legacy3x": r_legacy, "mode": mode,
-              "n_devices": n_dev, "steals": out_async.trace.steals}
+              "n_devices": n_dev, "steals": out_async.trace.steals,
+              "n_chunks": n_chunks, "size": size, "ksize": ksize,
+              "concurrency_capacity": capacity, "floor": floor}
     if json_out:
         print(json.dumps(result))
     return result
@@ -78,8 +150,10 @@ def run(size: int = 512, ksize: int = 9, json_out: bool = False):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--size", type=int, default=512)
-    ap.add_argument("--ksize", type=int, default=9)
+    ap.add_argument("--size", type=int, default=2048)
+    ap.add_argument("--ksize", type=int, default=15)
+    ap.add_argument("--target-chunk-us", type=float, default=3000.0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
-    run(args.size, args.ksize, json_out=args.json)
+    run(args.size, args.ksize, json_out=args.json,
+        target_chunk_us=args.target_chunk_us)

@@ -6,11 +6,17 @@ run; this script compares, per (backend, kernel), the latest entry
 against the one before it and exits non-zero when any kernel got more
 than ``--threshold`` (default 20%) slower AND by more than
 ``--min-delta-us`` (default 100us — relative noise on a sub-100us
-kernel is all dispatch jitter).  Missing file, a single run, or
-first-seen kernels all pass (no trajectory yet -> nothing to gate).
+kernel is all dispatch jitter).  ``cold_start/*`` rows (fresh-process
+first-call latency: autotune search cost, transfer seeding, calibrated
+first hybrid call) gate too, at ``--cold-threshold`` (default 75%) and
+a 50 ms minimum delta: subprocess cold numbers include jit compile
+time, which swings far more than steady-state kernel time, but a
+persistent multi-x cold-start regression (e.g. a broken cache path
+silently re-searching) must still fail.  Missing file, a single run,
+or first-seen kernels all pass (no trajectory yet -> nothing to gate).
 
 Usage: python benchmarks/regress.py [--threshold 0.2]
-       [--min-delta-us 100] [--history PATH]
+       [--cold-threshold 0.75] [--min-delta-us 100] [--history PATH]
 """
 from __future__ import annotations
 
@@ -41,11 +47,14 @@ def load_history(path: str):
     return rows
 
 
-def check(rows, threshold: float, min_delta_us: float = 100.0):
+def check(rows, threshold: float, min_delta_us: float = 100.0,
+          cold_threshold: float = 0.75):
     """Per (backend, kernel): (previous, latest) us; returns failures.
 
     Grouping includes the backend so a run on a different box/backend
-    never diffs against another backend's trajectory."""
+    never diffs against another backend's trajectory.  cold_start/*
+    rows use the looser ``cold_threshold`` and a 50 ms minimum delta
+    (compile-time noise)."""
     by_name = {}
     for row in rows:                      # file order == append order
         key = (row.get("backend", "?"), row["name"])
@@ -53,6 +62,9 @@ def check(rows, threshold: float, min_delta_us: float = 100.0):
     failures, lines = [], []
     for backend, name in sorted(by_name):
         entries = by_name[(backend, name)]
+        cold = name.startswith("cold_start/")
+        thr = cold_threshold if cold else threshold
+        min_delta = max(min_delta_us, 50_000.0) if cold else min_delta_us
         name = f"[{backend}] {name}"
         if len(entries) < 2:
             lines.append(f"{name}: {entries[-1]['us']:.0f}us (first entry)")
@@ -62,7 +74,7 @@ def check(rows, threshold: float, min_delta_us: float = 100.0):
             continue
         ratio = last["us"] / prev["us"]
         status = "OK"
-        if ratio > 1 + threshold and last["us"] - prev["us"] > min_delta_us:
+        if ratio > 1 + thr and last["us"] - prev["us"] > min_delta:
             status = "REGRESSION"
             failures.append((name, prev["us"], last["us"], ratio))
         lines.append(f"{name}: {prev['us']:.0f}us -> {last['us']:.0f}us "
@@ -74,6 +86,9 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--threshold", type=float, default=0.2,
                     help="max allowed fractional slowdown (0.2 = 20%%)")
+    ap.add_argument("--cold-threshold", type=float, default=0.75,
+                    help="max allowed fractional slowdown for "
+                         "cold_start/* rows (compile-time noise)")
     ap.add_argument("--min-delta-us", type=float, default=100.0,
                     help="ignore regressions smaller than this absolute "
                          "delta (dispatch jitter on tiny kernels)")
@@ -85,7 +100,8 @@ def main() -> int:
     if not rows:
         print(f"regress: no history at {args.history} (nothing to gate)")
         return 0
-    failures, lines = check(rows, args.threshold, args.min_delta_us)
+    failures, lines = check(rows, args.threshold, args.min_delta_us,
+                            args.cold_threshold)
     for ln in lines:
         print("regress:", ln)
     if failures:

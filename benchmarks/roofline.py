@@ -19,11 +19,16 @@ from typing import Dict, Optional
 
 from repro.configs import registry
 from repro.configs.base import SHAPES, shape_applicable
+from repro.core.cost_model import tpu_v5e_profile
 from repro.launch import analytic
 
-PEAK = 197e12
-HBM = 819e9
-ICI = 50e9
+# single source of truth for the target-chip constants: the static
+# TPU-v5e HardwareProfile (measured profiles are per-backend and live
+# in the calibration store; this analysis models the 256-chip pod)
+_V5E = tpu_v5e_profile()
+PEAK = _V5E.matmul_flops
+HBM = _V5E.mem_bw
+ICI = _V5E.link_bw
 CHIPS = 256
 
 

@@ -12,11 +12,18 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 ``--json`` additionally writes machine-readable results so the perf
 trajectory is tracked across PRs:
-  BENCH_kernels.json  — kernels/* and roofline/* rows
+  BENCH_kernels.json  — kernels/*, cold_start/* and roofline/* rows
   BENCH_hybrid.json   — table2/fig3/fig4/fig5/split_sweep rows
-  BENCH_history.jsonl — one timestamped line per kernel row per run;
-                        benchmarks/regress.py gates on it (>20%
-                        regression vs the previous entry fails)
+  BENCH_history.jsonl — one timestamped line per kernel AND cold-start
+                        row per run; benchmarks/regress.py gates on it
+                        (>20% regression vs the previous entry fails;
+                        cold_start/* rows gate at a looser threshold —
+                        subprocess cold numbers carry compile noise)
+
+The cold_start section (fresh-process first-call latency: top-K vs
+full autotune search, transfer-seeded buckets, zero-probe calibrated
+planning) only runs under ``--json`` — it spawns subprocesses and is
+the slowest section.
 """
 import argparse
 import datetime
@@ -57,9 +64,9 @@ def main() -> None:
     for p in (_ROOT, os.path.join(_ROOT, "src")):
         if p not in sys.path:
             sys.path.insert(0, p)
-    from benchmarks import (fig3_scaling, fig4_overlap, fig5_tasks,
-                            kernels_bench, roofline, split_sweep,
-                            table2_hybrid)
+    from benchmarks import (cold_start, fig3_scaling, fig4_overlap,
+                            fig5_tasks, kernels_bench, roofline,
+                            split_sweep, table2_hybrid)
     hybrid_rows, kernel_rows = [], []
     print("# === Table 2: hybrid gain / idle (13 workloads) ===")
     hybrid_rows += _capture(table2_hybrid.run)
@@ -75,6 +82,9 @@ def main() -> None:
     kernel_rows += _capture(kernels_bench.run)
     print("# === roofline (40 cells) ===")
     kernel_rows += _capture(roofline.run)
+    if args.json:
+        print("# === cold start (fresh-process first-call latency) ===")
+        kernel_rows += _capture(cold_start.run)
 
     if args.json:
         import jax
@@ -89,7 +99,7 @@ def main() -> None:
         n_hist = 0
         with open(os.path.join(_ROOT, "BENCH_history.jsonl"), "a") as f:
             for row in kernel_rows:
-                if not row["name"].startswith("kernels/"):
+                if not row["name"].startswith(("kernels/", "cold_start/")):
                     continue
                 f.write(json.dumps({"ts": ts, "backend": meta["backend"],
                                     **row}) + "\n")

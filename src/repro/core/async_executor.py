@@ -189,15 +189,22 @@ class WorkStealingScheduler:
 
 
 class _UnitTimeEstimate:
-    """Online per-group seconds/unit EWMA used for steal decisions."""
+    """Online per-group seconds/unit EWMA used for steal decisions.
+
+    ``trusted`` names groups whose prior came from real calibration (a
+    cache hit or a hardware-model prediction) rather than the blind 1.0
+    default: their projections are steal-worthy before they have timed
+    a single chunk of their own this call."""
 
     def __init__(self, groups: Sequence[str],
                  priors: Optional[Dict[str, float]] = None,
-                 alpha: float = 0.5):
+                 alpha: float = 0.5,
+                 trusted: Optional[Sequence[str]] = None):
         self.alpha = alpha
         self.est: Dict[str, float] = {
             g: max((priors or {}).get(g, 1.0), _EPS) for g in groups}
         self.n_obs: Dict[str, int] = {g: 0 for g in groups}
+        self.trusted = set(trusted or ())
         self._lock = threading.Lock()
 
     def update(self, group: str, units: int, elapsed: float) -> None:
@@ -211,7 +218,8 @@ class _UnitTimeEstimate:
 
     def observed(self, group: str) -> bool:
         with self._lock:
-            return self.n_obs.get(group, 0) > 0
+            return (self.n_obs.get(group, 0) > 0
+                    or group in self.trusted)
 
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
@@ -239,12 +247,17 @@ class AsyncChunkExecutor:
             run_chunk: Callable[[str, int, int], object],
             chunk_units: int, mode: str,
             unit_time_priors: Optional[Dict[str, float]] = None,
-            whole_shares: bool = False) -> ExecutionTrace:
+            whole_shares: bool = False,
+            trusted_priors: Optional[Sequence[str]] = None
+            ) -> ExecutionTrace:
         """Execute the planned shares concurrently.  ``mode`` is
         "threads", "virtual", or "sequential" (the no-overlap baseline:
         same chunks, same order, one serial loop).  ``whole_shares``
         executes each group's share as a single chunk (suitability
-        splits with data-dependent chunk shapes; implies no stealing)."""
+        splits with data-dependent chunk shapes; implies no stealing).
+        ``trusted_priors`` lists groups whose ``unit_time_priors`` come
+        from calibration or the hardware cost model — they may steal
+        before timing a chunk of their own this call."""
         active = [(g, k) for g, k in zip(self.groups, units_per_group)
                   if k > 0]
         names = [g.name for g, _ in active]
@@ -255,7 +268,8 @@ class AsyncChunkExecutor:
         sched = WorkStealingScheduler(
             queues, steal=(self.steal and mode != "sequential"
                            and not whole_shares))
-        est = _UnitTimeEstimate(names, unit_time_priors)
+        est = _UnitTimeEstimate(names, unit_time_priors,
+                                trusted=trusted_priors)
         n_chunks = sum(len(q) for q in queues.values())
         records: List[ChunkRecord] = []
         outputs: Dict[int, object] = {}
@@ -303,6 +317,16 @@ class AsyncChunkExecutor:
             return self.time_model(group.name, chunk.units)
         return raw_elapsed * getattr(group, "slowdown", 1.0)
 
+    @staticmethod
+    def _device_ctx(group):
+        """Pin execution to the group's primary device — the SAME
+        context the threaded workers use.  jax.default_device is part
+        of the jit cache key, so virtual/sequential runs without it
+        would miss every executable the warmup compiled under it."""
+        import jax
+        dev = group.devices[0] if getattr(group, "devices", None) else None
+        return jax.default_device(dev) if dev is not None else nullcontext()
+
     def _run_virtual(self, active, sched, est, run_chunk, account,
                      clocks) -> None:
         """Discrete-event loop: the group with the lowest virtual clock
@@ -330,7 +354,8 @@ class AsyncChunkExecutor:
                 continue
             chunk, stolen = got
             t0 = time.perf_counter()
-            out = run_chunk(name, chunk.start, chunk.units)
+            with self._device_ctx(g):
+                out = run_chunk(name, chunk.start, chunk.units)
             dt = self._chunk_time(g, chunk, time.perf_counter() - t0)
             account(name, chunk, out, clocks[name], dt, stolen)
             est.update(name, chunk.units, dt)
@@ -402,7 +427,8 @@ class AsyncChunkExecutor:
                     break
                 chunk, stolen = got
                 t0 = time.perf_counter()
-                out = run_chunk(name, chunk.start, chunk.units)
+                with self._device_ctx(g):
+                    out = run_chunk(name, chunk.start, chunk.units)
                 dt = self._chunk_time(g, chunk, time.perf_counter() - t0)
                 account(name, chunk, out, t_cursor, dt, stolen)
                 t_cursor += dt

@@ -11,13 +11,25 @@ Steady-state calls must not pay for calibration again: the process-wide
 so an executor created for a workload it has seen before skips the
 probe runs entirely and ``run_work_shared`` executes each chunk exactly
 once (no warmup, no min-of-N re-execution).
+
+Since PR 3 the cache is also *persistent* (JSON store shared with the
+hardware profile, ``REPRO_CALIB_CACHE``, same merge-on-write contract
+as the tune cache): a brand-new process finds the previous process's
+measured unit times on disk and plans its first work-shared call with
+zero probe runs.  Disk-loaded entries are marked ``in_process=False``
+so the executor still warms jit compilation once per process — warmth
+is a property of the process, calibration of the box.
 """
 from __future__ import annotations
 
+import atexit
 import threading
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.persist import JsonStore, default_calib_path
 
 _MIN_UNIT_TIME = 1e-9
 
@@ -117,10 +129,15 @@ def measure(fn: Callable[[], object], warmup: int = 1, iters: int = 3,
 
     ``reduce="mean"`` (calibration: expected steady-state cost) or
     ``"min"`` (autotune search: best-case ranking is robust to noise
-    from other timers/threads on a shared box)."""
+    from other timers/threads on a shared box).
+
+    ``warmup=0`` is the pure-cold mode (the cold-start benchmark times
+    the *first* call, jit compile included); ``iters`` is clamped to at
+    least 1 so ``warmup=0, iters=1`` can never divide by zero."""
     import jax
 
-    for _ in range(warmup):
+    iters = max(int(iters), 1)
+    for _ in range(max(int(warmup), 0)):
         jax.block_until_ready(fn())
     times = []
     for _ in range(iters):
@@ -137,43 +154,148 @@ def measure(fn: Callable[[], object], warmup: int = 1, iters: int = 3,
 class _CacheEntry:
     unit_time: float                 # EWMA seconds per work unit
     n_obs: int = 1
+    in_process: bool = True          # measured in THIS process (vs disk)
+
+
+_CALIB_SECTION = "unit_times"
 
 
 class CalibrationCache:
     """Process-wide seconds/unit memory, keyed by
     (workload, group, slowdown).  The slowdown is part of the key so
     simulated platforms with different throughput ratios (Hybrid-High
-    vs Hybrid-Low) never share entries."""
+    vs Hybrid-Low) never share entries.
 
-    def __init__(self, alpha: float = 0.25):
+    Backed by a JSON store (section ``unit_times``, keyed per backend)
+    with the tune cache's merge-on-write / atomic-replace / corrupt-file
+    tolerance contract, so a fresh process starts from the previous
+    process's measured unit times and plans without probe runs.  Only
+    unit times persist: sticky plans are derived state, and entries
+    loaded from disk are flagged ``in_process=False`` so per-process
+    jit warmup still happens exactly once."""
+
+    # deferred-flush window for updates to already-persisted keys
+    FLUSH_INTERVAL_S = 2.0
+
+    def __init__(self, alpha: float = 0.25, path: Optional[str] = "auto"):
         self.alpha = alpha
         self._store: Dict[Tuple[str, str, float], _CacheEntry] = {}
         self._plans: Dict[str, Tuple[int, int, List[int]]] = {}
         self._lock = threading.Lock()
+        self._disk = JsonStore(default_calib_path() if path == "auto"
+                               else path)
+        self._disk_loaded = False
+        self._backend: Optional[str] = None
+        self._dirty = False
+        self._last_flush = 0.0
 
     @staticmethod
     def key(workload: str, group: str, slowdown: float = 1.0
             ) -> Tuple[str, str, float]:
         return (workload, group, round(float(slowdown), 6))
 
+    @staticmethod
+    def _json_key(k: Tuple[str, str, float]) -> str:
+        return "\t".join((k[0], k[1], f"{k[2]:g}"))
+
+    def _backend_name(self) -> str:
+        if self._backend is None:
+            try:
+                import jax
+                self._backend = jax.default_backend()
+            except Exception:
+                self._backend = "unknown"
+        return self._backend
+
+    def _load_disk(self) -> None:
+        """Merge persisted unit times (for this backend) into memory as
+        ``in_process=False`` entries; in-memory measurements win."""
+        if self._disk_loaded:
+            return
+        self._disk_loaded = True
+        if not self._disk.path:
+            return
+        with self._disk.lock:
+            section = self._disk.data().get(_CALIB_SECTION, {})
+        entries = section.get(self._backend_name(), {})
+        if not isinstance(entries, dict):
+            return
+        for jk, e in entries.items():
+            parts = jk.split("\t")
+            if len(parts) != 3 or not isinstance(e, dict):
+                continue
+            try:
+                k = self.key(parts[0], parts[1], float(parts[2]))
+                t = float(e["t"])
+                n = int(e.get("n", 1))
+            except (ValueError, KeyError, TypeError):
+                continue
+            if k not in self._store:
+                self._store[k] = _CacheEntry(max(t, _MIN_UNIT_TIME),
+                                             n_obs=max(n, 1),
+                                             in_process=False)
+
+    def _flush_locked(self) -> None:
+        if not self._disk.path or not self._dirty:
+            return
+        self._dirty = False
+        self._last_flush = time.monotonic()
+        with self._disk.lock:
+            dest = self._disk.data().setdefault(
+                _CALIB_SECTION, {}).setdefault(self._backend_name(), {})
+            for k, e in self._store.items():
+                dest[self._json_key(k)] = {"t": e.unit_time, "n": e.n_obs}
+            self._disk.flush()
+
+    def flush(self) -> None:
+        """Persist any deferred updates now (atexit hook; also safe to
+        call explicitly, e.g. before handing the store to another
+        process)."""
+        with self._lock:
+            self._flush_locked()
+
     def get(self, workload: str, group: str, slowdown: float = 1.0
             ) -> Optional[float]:
         with self._lock:
+            self._load_disk()
             e = self._store.get(self.key(workload, group, slowdown))
             return e.unit_time if e else None
 
+    def warmed_in_process(self, workload: str, group: str,
+                          slowdown: float = 1.0) -> bool:
+        """True when this entry was measured in THIS process — i.e. the
+        chunk shapes behind it are already jit-compiled here.  A
+        disk-loaded entry calibrates the plan but must not skip the
+        per-process compile warmup."""
+        with self._lock:
+            self._load_disk()
+            e = self._store.get(self.key(workload, group, slowdown))
+            return bool(e and e.in_process)
+
     def put(self, workload: str, group: str, unit_time: float,
             slowdown: float = 1.0) -> None:
+        """A NEW key flushes immediately (it is what lets a fresh
+        process plan without probes); EWMA refinements of existing
+        keys — the per-call steady-state case — defer to the debounce
+        window + atexit so benchmark-timed paths stay free of file
+        I/O."""
         unit_time = max(unit_time, _MIN_UNIT_TIME)
         k = self.key(workload, group, slowdown)
         with self._lock:
+            self._load_disk()
             e = self._store.get(k)
-            if e is None:
+            fresh = e is None
+            if fresh:
                 self._store[k] = _CacheEntry(unit_time)
             else:
                 e.unit_time = (self.alpha * unit_time
                                + (1 - self.alpha) * e.unit_time)
                 e.n_obs += 1
+                e.in_process = True
+            self._dirty = True
+            if fresh or (time.monotonic() - self._last_flush
+                         >= self.FLUSH_INTERVAL_S):
+                self._flush_locked()
 
     def sticky_plan(self, workload: str, total_units: int,
                     chunk_units: int, assigned: Sequence[int]
@@ -196,27 +318,57 @@ class CalibrationCache:
             return assigned
 
     def clear(self) -> None:
+        """Forget everything, memory AND the persisted unit times for
+        every backend (the ``hardware`` profile section is untouched —
+        clearing calibration must not force a profile re-measure)."""
         with self._lock:
             self._store.clear()
             self._plans.clear()
+            self._disk_loaded = True
+            self._dirty = False
+            self._disk.clear(_CALIB_SECTION)
 
 
-_GLOBAL_CACHE = CalibrationCache()
+_GLOBAL_CACHE: Optional[CalibrationCache] = None
+_GLOBAL_CACHE_PATH: Optional[str] = "unset"
+_GLOBAL_LOCK = threading.Lock()
 
 
 def get_calibration_cache() -> CalibrationCache:
-    return _GLOBAL_CACHE
+    """Process-wide cache; re-resolved when REPRO_CALIB_CACHE changes
+    (tests point it at tmp dirs)."""
+    global _GLOBAL_CACHE, _GLOBAL_CACHE_PATH
+    path = default_calib_path()
+    with _GLOBAL_LOCK:
+        if _GLOBAL_CACHE is None or _GLOBAL_CACHE_PATH != path:
+            _GLOBAL_CACHE = CalibrationCache(path=path)
+            _GLOBAL_CACHE_PATH = path
+        return _GLOBAL_CACHE
 
 
 def clear_calibration_cache() -> None:
-    _GLOBAL_CACHE.clear()
+    get_calibration_cache().clear()
+
+
+def _flush_global_at_exit() -> None:
+    """One module-level hook (not one per instance — tests repoint the
+    store path and would otherwise pin every replaced instance alive
+    and replay its stale deferred writes at exit): only the CURRENT
+    global cache flushes its deferred updates."""
+    with _GLOBAL_LOCK:
+        cache = _GLOBAL_CACHE
+    if cache is not None:
+        cache.flush()
+
+
+atexit.register(_flush_global_at_exit)
 
 
 # ---------------------------------------------------------------------------
-# Static estimates from hardware constants (used before any measurement,
-# and by the roofline analysis; TPU v5e per chip)
+# Static estimates from hardware constants (deprecated shim; the real
+# per-backend numbers live in core.cost_model.HardwareProfile)
 # ---------------------------------------------------------------------------
-PEAK_FLOPS_BF16 = 197e12          # per chip
+PEAK_FLOPS_BF16 = 197e12          # per chip (TPU v5e; kept for callers)
 HBM_BW = 819e9                    # bytes/sec
 ICI_BW = 50e9                     # bytes/sec/link
 
@@ -224,7 +376,18 @@ ICI_BW = 50e9                     # bytes/sec/link
 def static_time_estimate(flops: float, bytes_hbm: float,
                          bytes_collective: float = 0.0, chips: int = 1
                          ) -> float:
-    """Roofline-style lower-bound execution time estimate (seconds)."""
-    return max(flops / (chips * PEAK_FLOPS_BF16),
-               bytes_hbm / (chips * HBM_BW),
-               bytes_collective / (chips * ICI_BW))
+    """Roofline-style lower-bound execution time estimate (seconds).
+
+    Deprecated: use ``core.cost_model.get_profile().predict(...)`` for
+    measured per-backend terms; this shim keeps the historical TPU-v5e
+    signature for ``launch/analytic.py`` / ``benchmarks/roofline.py``
+    style callers, now delegating to the static profile."""
+    warnings.warn(
+        "static_time_estimate is deprecated; use "
+        "core.cost_model.HardwareProfile.predict", DeprecationWarning,
+        stacklevel=2)
+    from repro.core.cost_model import tpu_v5e_profile
+    p = tpu_v5e_profile()
+    return max(flops / (chips * p.matmul_flops),
+               bytes_hbm / (chips * p.mem_bw),
+               bytes_collective / (chips * p.link_bw))

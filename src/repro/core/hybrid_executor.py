@@ -35,6 +35,7 @@ benchmarks can show how far reality is from the model.
 from __future__ import annotations
 
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -149,14 +150,25 @@ class HybridExecutor:
 
     # ------------------------------------------------------------------
     def calibrate(self, fn: Callable[[str, int], object], probe_units: int,
-                  workload: Optional[str] = None, iters: int = 1) -> None:
+                  workload: Optional[str] = None, iters: int = 1,
+                  unit_cost=None) -> None:
         """Seed per-group throughput for a workload (paper §4.5).
 
         On a cache hit for every group the probe runs are skipped
-        entirely — the cached seconds/unit are installed and the next
-        ``run_work_shared`` call executes each chunk exactly once.  On
-        a miss each group runs the probe ``1 + iters`` times (one
-        warmup so jit compilation never distorts the measurement)."""
+        entirely — the cached seconds/unit are installed; the cache is
+        disk-persistent, so a *fresh process* also plans its first call
+        with zero probe runs.  Compile warmup is tracked separately:
+        only entries measured in this process suppress it (a disk hit
+        calibrates the plan but jit shapes are still cold here).
+
+        ``unit_cost`` (a ``core.cost_model.CostTerms`` describing ONE
+        work unit) supplies a model-predicted prior on a cache miss, so
+        even a first-ever call plans without probes; the model's guess
+        is never persisted — the first real chunks overwrite it with
+        measurements.  On a miss without ``unit_cost`` (or with the
+        model disabled) each group runs the probe ``1 + iters`` times
+        (one warmup so jit compilation never distorts the measurement).
+        """
         self.tracker.reset()
         self._cache_key = workload
         probe_units = max(int(probe_units), 1)
@@ -166,8 +178,17 @@ class HybridExecutor:
                       if workload else None)
             if cached is not None:
                 self.tracker.seed(g.name, cached)
+                warm = warm and self.cache.warmed_in_process(
+                    workload, g.name, g.slowdown)
                 continue
             warm = False
+            if unit_cost is not None:
+                from repro.core import cost_model
+                if cost_model.enabled():
+                    t_unit = (cost_model.predict(unit_cost)
+                              * g.slowdown)
+                    self.tracker.seed(g.name, t_unit)
+                    continue
             t = measure(lambda: fn(g.name, probe_units), warmup=1,
                         iters=iters)
             t *= g.slowdown
@@ -237,13 +258,26 @@ class HybridExecutor:
                 plan_key, total_units, chunk_units, assigned0)
         do_warmup = (not self._warm) if warmup is None else warmup
 
+        mode = "sequential" if sequential else self._mode()
+        # what the scheduler will actually allow (mirrors the override
+        # applied to self._async.steal below + AsyncChunkExecutor.run)
+        base_steal = self._async.steal if steal is None else steal
+        eff_steal = (base_steal and mode != "sequential"
+                     and not whole_shares and plan_override is None)
+
         if do_warmup:
             # warm the chunk shapes each group will actually execute:
             # one representative per (units, at-lo-boundary,
-            # at-hi-boundary) signature of its own queue — boundary
-            # chunks see halo-clamped shapes, the grid tail may be a
-            # short chunk, and suitability-split groups (spmv) must not
-            # be warmed on ranges the other path owns
+            # at-hi-boundary) signature — boundary chunks see
+            # halo-clamped shapes, the grid tail may be a short chunk,
+            # and suitability-split groups (spmv) must not be warmed on
+            # ranges the other path owns.  Each group warms *under its
+            # device context*: the worker threads pin devices and jit
+            # executables are cached per device, so a main-thread
+            # warmup would leave the other device's compiles inside
+            # the timed path.  With stealing on, every group warms the
+            # whole grid's signatures — a stolen boundary chunk must
+            # not compile mid-run either.
             names = [g.name for g in self.groups]
             active = [(n_, k) for n_, k in zip(names, units) if k > 0]
             total_assigned = sum(k for _, k in active)
@@ -253,17 +287,33 @@ class HybridExecutor:
             else:
                 queues = make_chunks([k for _, k in active],
                                      [n_ for n_, _ in active], chunk_units)
+            all_chunks = [c for q in queues.values() for c in q]
+            by_name = {g.name: g for g in self.groups}
+            warmed = set()
             for name, q in queues.items():
-                seen = set()
-                for c in q:
-                    sig = (c.units, c.start == 0,
-                           c.start + c.units == total_assigned)
-                    if sig not in seen:
-                        seen.add(sig)
+                g = by_name[name]
+                dev = g.devices[0] if g.devices else None
+                ctx = (jax.default_device(dev) if dev is not None
+                       else nullcontext())
+                chunks = all_chunks if eff_steal else q
+                with ctx:
+                    for c in chunks:
+                        end = c.start + c.units
+                        # near-boundary flags: halo workloads clamp the
+                        # SECOND and PENULTIMATE chunks too (a halo that
+                        # reaches past the grid edge), so those shapes
+                        # get their own warmup representative
+                        sig = (id(dev) if dev is not None else None,
+                               c.units, c.start == 0,
+                               c.start <= chunk_units,
+                               end == total_assigned,
+                               total_assigned - end <= chunk_units)
+                        if sig in warmed:
+                            continue
+                        warmed.add(sig)
                         jax.block_until_ready(
                             run_share(name, c.start, c.units))
 
-        mode = "sequential" if sequential else self._mode()
         saved_steal = self._async.steal
         if plan_override is not None:
             self._async.steal = False
@@ -273,9 +323,15 @@ class HybridExecutor:
             thr = self.tracker.throughputs([g.name for g in self.groups])
             priors = {g.name: (1.0 / t if t > 0 else 1.0)
                       for g, t in zip(self.groups, thr)}
+            # groups with a calibrated/model-seeded unit time carry a
+            # trustworthy projection: they may steal before timing a
+            # chunk of their own this call (cold first calls included)
+            trusted = [g.name for g in self.groups
+                       if self.tracker.stats[g.name].n_obs > 0]
             trace = self._async.run(units, run_share, chunk_units, mode,
                                     unit_time_priors=priors,
-                                    whole_shares=whole_shares)
+                                    whole_shares=whole_shares,
+                                    trusted_priors=trusted)
         finally:
             self._async.steal = saved_steal
 

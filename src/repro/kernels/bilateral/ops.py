@@ -8,9 +8,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.cost_model import CostTerms
 from repro.core.host_offload import bilateral_luts
 from repro.kernels.autotune import (Config, autotune, bucket,
-                                    default_config, freeze)
+                                    cached_or_default, default_config,
+                                    freeze, is_tracer)
 from repro.kernels.bilateral.bilateral import (bilateral_lut_xla,
                                                bilateral_pallas)
 from repro.kernels.bilateral.ref import bilateral_ref
@@ -42,13 +44,35 @@ def shape_bucket(H: int, W: int, K: int) -> str:
     return f"H{bucket(H)}_W{bucket(W)}_K{K}"
 
 
+def cost_terms(cfg: Config, H: int, W: int, K: int) -> CostTerms:
+    """Analytic work of one candidate (ranks the autotune search).
+    K is the LUT window (2*radius+1): K^2 weighted taps per pixel."""
+    flops = 6.0 * H * W * K * K                    # weight, mul, 2 sums
+    if cfg.get("impl", "pallas") == "xla_lut":
+        return CostTerms(flops=flops, bytes=4.0 * 2 * H * W * K * K,
+                         steps=K * K)
+    rt = max(int(cfg.get("row_tile", 64)), 1)
+    tiles = -(-H // rt)
+    halo = (rt + K - 1) * W
+    from repro.kernels.common import default_interpret
+    return CostTerms(flops=6.0 * tiles * rt * W * K * K,
+                     bytes=4.0 * tiles * (halo + rt * W) * K * K,
+                     steps=tiles,
+                     interpret_steps=tiles if default_interpret() else 0)
+
+
 def tuned_config(img, sp, rl) -> Config:
     H, W = img.shape
     K = sp.shape[0]
+    default = default_config(SEED_CONFIG, DEFAULT_CONFIG)
+    if is_tracer(img):
+        return cached_or_default("bilateral", shape_bucket(H, W, K),
+                                 default)
     return autotune(
         "bilateral", shape_bucket(H, W, K), candidates(H, W, K),
         lambda cfg: lambda: _bilat_cfg(img, sp, rl, freeze(cfg)),
-        default_config(SEED_CONFIG, DEFAULT_CONFIG))
+        default,
+        cost_fn=lambda cfg: cost_terms(cfg, H, W, K))
 
 
 def bilateral_filter(img, sp, rl, *, config: Optional[Config] = None):

@@ -11,8 +11,10 @@ from typing import Optional
 
 import jax
 
+from repro.core.cost_model import CostTerms
 from repro.kernels.autotune import (Config, autotune, bucket,
-                                    default_config, freeze)
+                                    cached_or_default, default_config,
+                                    freeze, is_tracer)
 from repro.kernels.conv2d.conv2d import conv2d_pallas, conv2d_shift_add
 from repro.kernels.conv2d.ref import conv2d_ref
 
@@ -51,15 +53,42 @@ def shape_bucket(H: int, W: int, K: int) -> str:
     return f"H{bucket(H)}_W{bucket(W)}_K{K}"
 
 
+def cost_terms(cfg: Config, H: int, W: int, K: int) -> CostTerms:
+    """Analytic work of one candidate (ranks the autotune search)."""
+    flops = 2.0 * H * W * K * K
+    impl = cfg.get("impl", "pallas")
+    if impl == "xla_conv":
+        return CostTerms(flops=flops, bytes=4.0 * (2 * H * W + K * K))
+    if impl == "xla_shift":
+        # K^2 shifted multiply-accumulates, each streaming the image
+        return CostTerms(flops=flops, bytes=4.0 * 2 * H * W * K * K,
+                         steps=K * K)
+    rt = max(int(cfg.get("row_tile", 64)), 1)
+    ct = int(cfg.get("col_tile", 0)) or W
+    tiles = -(-H // rt) * (-(-W // ct))
+    halo = (rt + K - 1) * (ct + K - 1)                 # per-tile read
+    from repro.kernels.common import default_interpret
+    return CostTerms(flops=2.0 * tiles * rt * ct * K * K,
+                     bytes=4.0 * tiles * (halo + rt * ct),
+                     steps=tiles,
+                     interpret_steps=tiles if default_interpret() else 0)
+
+
 def tuned_config(img, w) -> Config:
     """Resolve (searching at most once per backend/shape bucket) the
-    tuned config for this input — callable outside the timed path."""
+    tuned config for this input — callable outside the timed path.
+    Under jit tracing this degrades to a cache-hit-or-default lookup
+    (timing tracers is meaningless)."""
     H, W = img.shape
     K = w.shape[0]
+    default = default_config(SEED_CONFIG, DEFAULT_CONFIG)
+    if is_tracer(img) or is_tracer(w):
+        return cached_or_default("conv2d", shape_bucket(H, W, K), default)
     return autotune(
         "conv2d", shape_bucket(H, W, K), candidates(H, W, K),
         lambda cfg: lambda: _conv2d_cfg(img, w, freeze(cfg)),
-        default_config(SEED_CONFIG, DEFAULT_CONFIG))
+        default,
+        cost_fn=lambda cfg: cost_terms(cfg, H, W, K))
 
 
 def conv2d(img, w, *, use_kernel: bool = True,

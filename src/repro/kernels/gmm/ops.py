@@ -6,8 +6,10 @@ from typing import Optional
 
 import jax
 
+from repro.core.cost_model import CostTerms
 from repro.kernels.autotune import (Config, autotune, bucket,
-                                    default_config, freeze)
+                                    cached_or_default, default_config,
+                                    freeze, is_tracer)
 from repro.kernels.gmm.gmm import gmm_pallas
 from repro.kernels.gmm.ref import gmm_ref
 
@@ -54,13 +56,60 @@ def shape_bucket(E: int, C: int, D: int, F: int) -> str:
     return f"E{bucket(E)}_C{bucket(C)}_D{bucket(D)}_F{bucket(F)}"
 
 
+def _pad(n: int, tile: int) -> int:
+    return -(-n // max(tile, 1)) * max(tile, 1)
+
+
+def cost_terms(cfg: Config, E: int, C: int, D: int, F: int) -> CostTerms:
+    """Analytic work of one candidate (ranks the autotune search)."""
+    if cfg.get("impl", "pallas") == "xla_einsum":
+        return CostTerms(flops=2.0 * E * C * D * F,
+                         bytes=4.0 * E * (C * D + D * F + C * F),
+                         compute="matmul")
+    tc = max(int(cfg.get("tile_c", 128)), 1)
+    tf = max(int(cfg.get("tile_f", 128)), 1)
+    td = max(int(cfg.get("tile_d", 128)), 1)
+    Cp, Dp, Fp = _pad(C, tc), _pad(D, td), _pad(F, tf)
+    word = 2.0 if cfg.get("acc_dtype") == "bfloat16" else 4.0
+    # classic tiled-matmul traffic: each operand re-read once per tile
+    # of the other free dimension
+    by = word * E * (Cp * Dp * (Fp // tf) + Dp * Fp * (Cp // tc)
+                     + Cp * Fp)
+    steps = E * (Cp // tc) * (Fp // tf) * (Dp // td)
+    from repro.kernels.common import default_interpret
+    return CostTerms(flops=2.0 * E * Cp * Dp * Fp, bytes=by,
+                     steps=steps, compute="matmul",
+                     interpret_steps=steps if default_interpret() else 0)
+
+
 def tuned_config(x, w) -> Config:
     E, C, D = x.shape
     F = w.shape[2]
+    default = default_config(SEED_CONFIG, DEFAULT_CONFIG)
+    if is_tracer(x) or is_tracer(w):
+        return cached_or_default("gmm", shape_bucket(E, C, D, F), default)
     return autotune(
         "gmm", shape_bucket(E, C, D, F), candidates(E, C, D, F),
         lambda cfg: lambda: _gmm_cfg(x, w, freeze(cfg)),
+        default,
+        cost_fn=lambda cfg: cost_terms(cfg, E, C, D, F))
+
+
+def gmm_model(x, w):
+    """Model-layer grouped matmul through the tuned config.
+
+    Tracer-safe resolution (cache-hit-or-default, never a timed
+    search) restricted to differentiable implementations — the pallas
+    kernel defines no VJP, so a pallas winner maps to ``xla_einsum``
+    here.  MoE layers call this from jitted/vmapped train steps."""
+    E, C, D = x.shape
+    F = w.shape[2]
+    cfg = cached_or_default(
+        "gmm", shape_bucket(E, C, D, F),
         default_config(SEED_CONFIG, DEFAULT_CONFIG))
+    if cfg.get("impl") == "pallas":
+        cfg = {**cfg, "impl": "xla_einsum"}
+    return _gmm_cfg(x, w, freeze(cfg))
 
 
 def gmm(x, w, *, use_kernel: bool = True, config: Optional[Config] = None,

@@ -2,13 +2,16 @@
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.cost_model import CostTerms
 from repro.kernels.autotune import (Config, autotune, bucket,
-                                    default_config, freeze)
+                                    cached_or_default, default_config,
+                                    freeze, is_tracer)
 from repro.kernels.hist.hist import hist_host, hist_pallas, hist_sort_xla
 from repro.kernels.hist.ref import hist_ref
 
@@ -52,13 +55,40 @@ def shape_bucket(n: int, n_bins: int) -> str:
     return f"N{bucket(n)}_B{n_bins}"
 
 
+def cost_terms(cfg: Config, n: int, n_bins: int) -> CostTerms:
+    """Analytic work of one candidate (ranks the autotune search)."""
+    impl = cfg.get("impl", "pallas")
+    if impl == "xla_bincount":
+        return CostTerms(flops=2.0 * n, bytes=4.0 * (n + n_bins))
+    if impl == "xla_sort":
+        lg = max(math.log2(max(n, 2)), 1.0)
+        return CostTerms(flops=4.0 * n * lg, bytes=8.0 * n * lg)
+    if impl == "host_bincount":
+        return CostTerms(flops=2.0 * n, host_bytes=4.0 * (n + n_bins))
+    tile = max(int(cfg.get("tile", 2048)), 1)
+    bb = int(cfg.get("bin_block", 0)) or n_bins
+    n_t = -(-n // tile)
+    n_b = -(-n_bins // bb)
+    from repro.kernels.common import default_interpret
+    # one-hot compares every element against every bin (in blocks)
+    return CostTerms(flops=2.0 * n_t * tile * n_bins,
+                     bytes=4.0 * (n_t * tile * n_b + n_t * n_b * bb),
+                     steps=n_t * n_b,
+                     interpret_steps=(n_t * n_b if default_interpret()
+                                      else 0))
+
+
 def tuned_config(x, n_bins: int) -> Config:
     n = int(x.size)
+    default = default_config(SEED_CONFIG, DEFAULT_CONFIG)
+    if is_tracer(x):
+        return cached_or_default("hist", shape_bucket(n, n_bins), default)
     xf = x.reshape(-1)
     return autotune(
         "hist", shape_bucket(n, n_bins), candidates(n, n_bins),
         lambda cfg: lambda: _hist_cfg(xf, n_bins, freeze(cfg)),
-        default_config(SEED_CONFIG, DEFAULT_CONFIG))
+        default,
+        cost_fn=lambda cfg: cost_terms(cfg, n, n_bins))
 
 
 def histogram(x: jnp.ndarray, n_bins: int, *, use_kernel: bool = True,

@@ -2,12 +2,15 @@
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
 
+from repro.core.cost_model import CostTerms
 from repro.kernels.autotune import (Config, autotune, bucket,
-                                    default_config, freeze)
+                                    cached_or_default, default_config,
+                                    freeze, is_tracer)
 from repro.kernels.sort_bitonic.ref import sort_rows_ref
 from repro.kernels.sort_bitonic.sort_bitonic import (bitonic_rows_xla,
                                                      sort_rows_pallas)
@@ -42,12 +45,35 @@ def shape_bucket(G: int, L: int) -> str:
     return f"G{bucket(G)}_L{L}"
 
 
+def cost_terms(cfg: Config, G: int, L: int) -> CostTerms:
+    """Analytic work of one candidate (ranks the autotune search)."""
+    lg = max(math.log2(max(L, 2)), 1.0)
+    net = lg * (lg + 1) / 2                        # bitonic stages
+    impl = cfg.get("impl", "pallas")
+    if impl == "xla_sort":
+        return CostTerms(flops=4.0 * G * L * lg, bytes=8.0 * G * L * lg)
+    if impl == "xla_bitonic":
+        return CostTerms(flops=4.0 * G * L * net, bytes=8.0 * G * L * net)
+    rt = max(int(cfg.get("row_tile", 256)), 1)
+    Gp = -(-G // rt) * rt                          # padded rows
+    from repro.kernels.common import default_interpret
+    return CostTerms(flops=4.0 * Gp * L * net, bytes=8.0 * Gp * L * net,
+                     steps=Gp // rt,
+                     interpret_steps=(Gp // rt if default_interpret()
+                                      else 0))
+
+
 def tuned_config(x) -> Config:
     G, L = x.shape
+    default = default_config(SEED_CONFIG, DEFAULT_CONFIG)
+    if is_tracer(x):
+        return cached_or_default("sort_bitonic", shape_bucket(G, L),
+                                 default)
     return autotune(
         "sort_bitonic", shape_bucket(G, L), candidates(G, L),
         lambda cfg: lambda: _sort_cfg(x, freeze(cfg)),
-        default_config(SEED_CONFIG, DEFAULT_CONFIG))
+        default,
+        cost_fn=lambda cfg: cost_terms(cfg, G, L))
 
 
 def sort_rows(x, *, use_kernel: bool = True,

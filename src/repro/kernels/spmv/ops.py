@@ -15,8 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import CostTerms
 from repro.kernels.autotune import (Config, autotune, bucket,
-                                    default_config, freeze)
+                                    cached_or_default, default_config,
+                                    freeze, is_tracer)
 from repro.kernels.spmv.spmv import spmv_ell_pallas
 from repro.kernels.spmv.ref import spmv_coo_ref, spmv_ell_ref
 
@@ -47,12 +49,29 @@ def _ell_cfg(vals, idx, x, cfg):
                            row_tile=int(c.get("row_tile", 256)))
 
 
+def cost_terms(cfg: Config, R: int, K: int) -> CostTerms:
+    """Analytic work of one candidate (ranks the autotune search)."""
+    if cfg.get("impl", "pallas") == "xla_ell":
+        return CostTerms(flops=2.0 * R * K, bytes=4.0 * (3 * R * K + 2 * R))
+    rt = max(int(cfg.get("row_tile", 256)), 1)
+    Rp = -(-R // rt) * rt                           # padded rows
+    from repro.kernels.common import default_interpret
+    return CostTerms(flops=2.0 * Rp * K, bytes=4.0 * (3 * Rp * K + 2 * Rp),
+                     steps=Rp // rt,
+                     interpret_steps=(Rp // rt if default_interpret()
+                                      else 0))
+
+
 def tuned_config(vals, idx, x) -> Config:
     R, K = vals.shape
+    default = default_config(SEED_CONFIG, DEFAULT_CONFIG)
+    if is_tracer(vals) or is_tracer(x):
+        return cached_or_default("spmv", shape_bucket(R, K), default)
     return autotune(
         "spmv", shape_bucket(R, K), candidates(R, K),
         lambda cfg: lambda: _ell_cfg(vals, idx, x, freeze(cfg)),
-        default_config(SEED_CONFIG, DEFAULT_CONFIG))
+        default,
+        cost_fn=lambda cfg: cost_terms(cfg, R, K))
 
 
 def spmv_ell(vals, idx, x, *, config: Optional[Config] = None):

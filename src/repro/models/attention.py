@@ -15,9 +15,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.flash_attention import ops as flash_ops
 from repro.models.layers import apply_rope, init_linear, linear, rms_norm_simple
 from repro.models.param import ones_init
-from repro.parallel.sharding import shard_act
+from repro.parallel.sharding import active_mesh, shard_act
 
 
 def kv_repeat_for(cfg, tp_hint: int) -> int:
@@ -99,16 +100,36 @@ def causal_mask(T: int, S: int, window: int = 0, offset: int = 0):
     return m
 
 
+def _can_use_tuned_sdpa(cfg, causal: bool) -> bool:
+    """The tuned flash_attention path covers plain causal / full
+    attention on an unsharded device: sliding windows, logit softcaps
+    and mesh-sharded activations (where the (B*H, T, d) flattening
+    would force gathers) stay on the einsum path."""
+    if active_mesh() is not None or cfg.logit_softcap:
+        return False
+    return not (causal and cfg.sliding_window)
+
+
 def attention(params, x, cfg, *, sin=None, cos=None, kv_repeat: int = 1,
               causal: bool = True, make_cache_len: int = 0):
-    """Full-sequence attention. Returns (y, cache_or_None)."""
+    """Full-sequence attention. Returns (y, cache_or_None).
+
+    Plain causal / full attention routes through the autotuned
+    ``flash_attention`` config for this shape (tracer-safe cache
+    lookup, differentiable impls only — see kernels/README.md); masked
+    variants keep the grouped-einsum path."""
     B, T, _ = x.shape
     q, k, v = _qkv(params, x, cfg, sin, cos, kv_repeat)
     q = shard_act(q, ("batch", None, "heads", None))
     k = shard_act(k, ("batch", "seq_kv", "heads", None))
     v = shard_act(v, ("batch", "seq_kv", "heads", None))
-    mask = causal_mask(T, T, cfg.sliding_window) if causal else None
-    out = _sdpa(q, k, v, mask, cfg)
+    tuned = (flash_ops.model_config(q, k, v, causal=causal)
+             if _can_use_tuned_sdpa(cfg, causal) else None)
+    if tuned is not None:
+        out = flash_ops.sdpa(q, k, v, causal=causal, config=tuned)
+    else:
+        mask = causal_mask(T, T, cfg.sliding_window) if causal else None
+        out = _sdpa(q, k, v, mask, cfg)
     y = linear(params["wo"], out.reshape(B, T, -1))
     cache = None
     if make_cache_len:
@@ -172,7 +193,14 @@ def cross_attention(params, x, enc_kv, cfg, kv_repeat: int = 1):
     B, T, _ = x.shape
     dh = cfg.head_dim_()
     q = linear(params["wq"], x).reshape(B, T, cfg.n_heads, dh)
-    out = _sdpa(q, enc_kv["k"], enc_kv["v"], None, cfg)
+    tuned = (flash_ops.model_config(q, enc_kv["k"], enc_kv["v"],
+                                    causal=False)
+             if _can_use_tuned_sdpa(cfg, causal=False) else None)
+    if tuned is not None:
+        out = flash_ops.sdpa(q, enc_kv["k"], enc_kv["v"], causal=False,
+                             config=tuned)
+    else:
+        out = _sdpa(q, enc_kv["k"], enc_kv["v"], None, cfg)
     return linear(params["wo"], out.reshape(B, T, -1))
 
 

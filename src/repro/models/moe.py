@@ -16,6 +16,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.gmm.ops import gmm_model
 from repro.models.layers import ACTS, init_linear, linear
 from repro.models.param import P, dense_init
 from repro.parallel.sharding import shard_act
@@ -88,11 +89,13 @@ def _one_pass(x_sorted, weights, sorted_e, pos, C: int, E: int, cfg):
         # keep the dispatch buffer expert-sharded end-to-end (§Perf):
         # under vmap the batch dim is added in front automatically
         buf = shard_act(buf, ("expert", None, None))
-    # grouped matmul (dense path — the MXU-friendly "dense rows")
-    h = jnp.einsum("ecd,edf->ecf", buf, weights["w_up"].astype(buf.dtype))
-    g = jnp.einsum("ecd,edf->ecf", buf, weights["w_gate"].astype(buf.dtype))
+    # grouped matmul (dense path — the MXU-friendly "dense rows"),
+    # through the autotuned gmm config for this (E, C, D, F) bucket
+    # (tracer-safe lookup, differentiable impls only)
+    h = gmm_model(buf, weights["w_up"].astype(buf.dtype))
+    g = gmm_model(buf, weights["w_gate"].astype(buf.dtype))
     h = h * act(g)
-    out = jnp.einsum("ecf,efd->ecd", h, weights["w_down"].astype(buf.dtype))
+    out = gmm_model(h, weights["w_down"].astype(buf.dtype))
     if cfg.moe.shard_dispatch:
         out = shard_act(out, ("expert", None, None))
     gathered = out[e_idx, p_idx]                # (Nk, d)

@@ -6,14 +6,20 @@ merge bin-by-bin — the paper's §4.2 verbatim.
 """
 from __future__ import annotations
 
+import functools
+
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import CostTerms
 from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
 from repro.kernels.hist.ops import histogram, tuned_config
 
 
+@functools.lru_cache(maxsize=8)
 def make_inputs(n: int = 1 << 20, n_bins: int = 256, seed: int = 0):
+    """Deterministic inputs, memoized (keeps host RNG out of benchmark
+    wall-clock measurements)."""
     rng = np.random.default_rng(seed)
     return jnp.asarray(rng.integers(0, n_bins, n, dtype=np.int32))
 
@@ -37,9 +43,12 @@ def run_hybrid(ex: HybridExecutor, n: int = 1 << 20, n_bins: int = 256,
         out.block_until_ready()
         return out
 
+    # ONE work unit = ``unit`` elements binned; a cold cache plans from
+    # the model with zero probe runs (memory-bound: bytes dominate)
+    unit_cost = CostTerms(flops=2.0 * unit, bytes=4.0 * unit)
     ex.calibrate(lambda g, k: run_share(g, 0, k),
                  probe_units=max(units // 8, 1),
-                 workload=f"hist/{n}x{n_bins}")
+                 workload=f"hist/{n}x{n_bins}", unit_cost=unit_cost)
     comm = n_bins * 4 / 6e9
     return ex.run_work_shared(
         "hist", units, run_share,

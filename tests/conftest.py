@@ -12,7 +12,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # never read or write ~/.cache/repro/autotune.json.  test_autotune.py
 # re-enables search per-test with an injected timer.
 os.environ.setdefault("REPRO_AUTOTUNE", "0")
-os.environ.setdefault(
-    "REPRO_TUNE_CACHE",
-    os.path.join(tempfile.mkdtemp(prefix="repro-tune-test-"),
-                 "autotune.json"))
+# The persistent stores are pointed at throwaway paths UNCONDITIONALLY:
+# the suite must never read or write ~/.cache/repro/* (persisted unit
+# times / tuned configs from a real run would change executor and ops
+# behavior under test, and tests that exercise clear()/round-trips
+# must never wipe the developer's real stores), even when the
+# developer has these knobs exported in their shell.
+os.environ["REPRO_TUNE_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro-tune-test-"), "autotune.json")
+os.environ["REPRO_CALIB_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro-calib-test-"), "calibration.json")

@@ -12,11 +12,20 @@ first hybrid call) gate too, at ``--cold-threshold`` (default 75%) and
 a 50 ms minimum delta: subprocess cold numbers include jit compile
 time, which swings far more than steady-state kernel time, but a
 persistent multi-x cold-start regression (e.g. a broken cache path
-silently re-searching) must still fail.  Missing file, a single run,
+silently re-searching) must still fail.  ``serving/*`` scheduler rows (p95
+latency and us-per-request throughput from ``serving_bench.py`` — all
+lower-is-better by construction) gate at ``--serving-threshold``
+(default 60%) with a 20 ms minimum delta: open-loop queueing tails are
+noisier than steady-state kernels, but a persistent multi-x p95 or
+throughput regression (e.g. a broken placement path serializing all
+lanes) must still fail.  FIFO-baseline rows, the fifo/sched ratio and
+probe-count rows are informational only (the baseline saturates by
+design; ratios are higher-is-better).  Missing file, a single run,
 or first-seen kernels all pass (no trajectory yet -> nothing to gate).
 
 Usage: python benchmarks/regress.py [--threshold 0.2]
-       [--cold-threshold 0.75] [--min-delta-us 100] [--history PATH]
+       [--cold-threshold 0.75] [--serving-threshold 0.6]
+       [--min-delta-us 100] [--history PATH]
 """
 from __future__ import annotations
 
@@ -48,13 +57,16 @@ def load_history(path: str):
 
 
 def check(rows, threshold: float, min_delta_us: float = 100.0,
-          cold_threshold: float = 0.75):
+          cold_threshold: float = 0.75, serving_threshold: float = 0.6):
     """Per (backend, kernel): (previous, latest) us; returns failures.
 
     Grouping includes the backend so a run on a different box/backend
     never diffs against another backend's trajectory.  cold_start/*
     rows use the looser ``cold_threshold`` and a 50 ms minimum delta
-    (compile-time noise)."""
+    (compile-time noise); serving/* rows use ``serving_threshold`` and
+    a 20 ms minimum delta (queueing-tail noise).  serving ratio/count
+    rows (``p95_ratio``, ``cold_probe``) are informational — a bigger
+    ratio is *better*, so they never gate."""
     by_name = {}
     for row in rows:                      # file order == append order
         key = (row.get("backend", "?"), row["name"])
@@ -62,9 +74,22 @@ def check(rows, threshold: float, min_delta_us: float = 100.0,
     failures, lines = [], []
     for backend, name in sorted(by_name):
         entries = by_name[(backend, name)]
+        if name.startswith(("serving/p95_ratio", "serving/cold_probe")):
+            continue                      # higher-is-better / count rows
+        if name.startswith("serving/") and "_fifo_" in name:
+            # the FIFO baseline saturates by design at the top arrival
+            # rate; its (legitimately bistable) queueing tail is
+            # context for the ratio, not a trajectory of ours
+            continue
         cold = name.startswith("cold_start/")
-        thr = cold_threshold if cold else threshold
-        min_delta = max(min_delta_us, 50_000.0) if cold else min_delta_us
+        serving = name.startswith("serving/")
+        thr = (cold_threshold if cold
+               else serving_threshold if serving else threshold)
+        min_delta = min_delta_us
+        if cold:
+            min_delta = max(min_delta_us, 50_000.0)
+        elif serving:
+            min_delta = max(min_delta_us, 20_000.0)
         name = f"[{backend}] {name}"
         if len(entries) < 2:
             lines.append(f"{name}: {entries[-1]['us']:.0f}us (first entry)")
@@ -89,6 +114,9 @@ def main() -> int:
     ap.add_argument("--cold-threshold", type=float, default=0.75,
                     help="max allowed fractional slowdown for "
                          "cold_start/* rows (compile-time noise)")
+    ap.add_argument("--serving-threshold", type=float, default=0.6,
+                    help="max allowed fractional slowdown for serving/* "
+                         "p95/throughput rows (queueing-tail noise)")
     ap.add_argument("--min-delta-us", type=float, default=100.0,
                     help="ignore regressions smaller than this absolute "
                          "delta (dispatch jitter on tiny kernels)")
@@ -101,7 +129,7 @@ def main() -> int:
         print(f"regress: no history at {args.history} (nothing to gate)")
         return 0
     failures, lines = check(rows, args.threshold, args.min_delta_us,
-                            args.cold_threshold)
+                            args.cold_threshold, args.serving_threshold)
     for ln in lines:
         print("regress:", ln)
     if failures:

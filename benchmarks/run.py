@@ -14,16 +14,19 @@ Prints ``name,us_per_call,derived`` CSV rows:
 trajectory is tracked across PRs:
   BENCH_kernels.json  — kernels/*, cold_start/* and roofline/* rows
   BENCH_hybrid.json   — table2/fig3/fig4/fig5/split_sweep rows
-  BENCH_history.jsonl — one timestamped line per kernel AND cold-start
-                        row per run; benchmarks/regress.py gates on it
-                        (>20% regression vs the previous entry fails;
-                        cold_start/* rows gate at a looser threshold —
-                        subprocess cold numbers carry compile noise)
+  BENCH_serving.json  — serving/* rows (written by serving_bench)
+  BENCH_history.jsonl — one timestamped line per kernel, cold-start
+                        AND serving row per run; benchmarks/regress.py
+                        gates on it (>20% regression vs the previous
+                        entry fails; cold_start/* and serving/* rows
+                        gate at looser thresholds — subprocess cold
+                        numbers carry compile noise, serving rows
+                        carry queueing-tail noise)
 
-The cold_start section (fresh-process first-call latency: top-K vs
-full autotune search, transfer-seeded buckets, zero-probe calibrated
-planning) only runs under ``--json`` — it spawns subprocesses and is
-the slowest section.
+The cold_start and serving sections (fresh-process first-call latency;
+scheduler-vs-FIFO latency percentiles + the two-process zero-probe
+check) only run under ``--json`` — they spawn subprocesses and are the
+slowest sections.
 """
 import argparse
 import datetime
@@ -82,9 +85,23 @@ def main() -> None:
     kernel_rows += _capture(kernels_bench.run)
     print("# === roofline (40 cells) ===")
     kernel_rows += _capture(roofline.run)
+    serving_ok = True
     if args.json:
         print("# === cold start (fresh-process first-call latency) ===")
         kernel_rows += _capture(cold_start.run)
+        print("# === serving (scheduler vs FIFO, smoke trace) ===")
+        from benchmarks import serving_bench
+        serving_state = {}
+
+        def _serving():
+            # json_out=False: the smoke trace must not clobber a full
+            # 2-device measurement stored in BENCH_serving.json; the
+            # trajectory still lands in BENCH_history.jsonl below
+            ok, _ = serving_bench.run(smoke=True, json_out=False)
+            serving_state["ok"] = ok
+
+        kernel_rows += _capture(_serving)
+        serving_ok = serving_state.get("ok", False)
 
     if args.json:
         import jax
@@ -99,7 +116,8 @@ def main() -> None:
         n_hist = 0
         with open(os.path.join(_ROOT, "BENCH_history.jsonl"), "a") as f:
             for row in kernel_rows:
-                if not row["name"].startswith(("kernels/", "cold_start/")):
+                if not row["name"].startswith(("kernels/", "cold_start/",
+                                               "serving/")):
                     continue
                 f.write(json.dumps({"ts": ts, "backend": meta["backend"],
                                     **row}) + "\n")
@@ -107,6 +125,11 @@ def main() -> None:
         print(f"# wrote BENCH_kernels.json ({len(kernel_rows)} rows), "
               f"BENCH_hybrid.json ({len(hybrid_rows)} rows), "
               f"BENCH_history.jsonl (+{n_hist} rows)")
+    if not serving_ok:
+        # hard serving invariants (dropped-without-rejection, nonzero
+        # cold probes) must not pass silently through a bench run
+        print("# serving invariants FAILED — see serving section above")
+        sys.exit(1)
 
 
 if __name__ == '__main__':

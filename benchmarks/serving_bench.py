@@ -1,0 +1,414 @@
+"""Serving-subsystem benchmark: cost-model scheduler vs FIFO-single-group.
+
+Drives an identical synthetic open-loop arrival trace (Poisson
+inter-arrivals over a conv + hist + attention workload mix) through two
+schedulers:
+
+  fifo   — the pre-subsystem baseline: every request dedicated to ONE
+           device group, arrival order, no batching, no work sharing.
+  sched  — the cost-model scheduler: placement arbitration across all
+           groups, same-bucket batching, §5.4.3 splits when the
+           projected win exceeds the split overhead.
+
+Arrival rates are scaled from the *measured* single-request service
+time (like overlap_check's measured chunk sizing): ``x0.5`` of one
+lane's capacity (both keep up — par is the pass bar there), ``x0.9``
+(FIFO at the edge) and ``x2.5`` (far beyond one lane — only
+co-scheduling plus batching amortization is sustainable; this is "the
+highest sustainable arrival rate" of the acceptance check, and where
+the p50/p95/p99 gap appears).  Open-loop means
+arrivals never wait for completions: an overloaded scheduler pays the
+full queueing delay in its latency tail, exactly like production
+traffic.
+
+Every run asserts the accounting invariant: submitted == completed +
+structured rejections (a request dropped *without* a rejection is a
+scheduler bug, not load).  ``--smoke`` (CI, 2 forced host devices)
+runs a reduced trace plus the two-process persisted-calibration check
+(process B's first scheduled call must plan with ZERO probe runs —
+PR 3's cold-start contract at the serving layer), exiting non-zero on
+any violation.
+
+Rows land in BENCH_serving.json (and BENCH_history.jsonl via
+``run.py --json``); ``regress.py`` gates serving/* p95 and throughput
+rows at a looser threshold (queueing tails are noisier than kernel
+microbenches).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+        PYTHONPATH=src python benchmarks/serving_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+# Bump when _mix() changes: the version rides in every row name so a
+# new mix starts a fresh regress trajectory instead of diffing against
+# latency percentiles of different traffic.
+MIX_VERSION = "m2"
+
+
+def _mix(smoke: bool):
+    """(workload, payload) mix; payloads are constant per workload so
+    repeat arrivals hit jit/tune caches like real same-shape traffic.
+    The mix is deliberately heterogeneous in *affinity* (the paper's
+    point): jax device kernels (conv/hist/attention) next to
+    host-native sort (numpy, GIL-releasing, single-core), so a
+    single-lane FIFO head-of-line-blocks short kernel requests behind
+    long sorts while the scheduler co-schedules them on different
+    lanes."""
+    if smoke:
+        return [("conv", {"size": 128, "ksize": 5}),
+                ("hist", {"n": 1 << 14, "n_bins": 64}),
+                ("sort", {"n": 1 << 17}),
+                ("attention", {"batch": 2, "seq": 64, "heads": 2,
+                               "dim": 32})]
+    return [("conv", {"size": 384, "ksize": 15}),
+            ("hist", {"n": 1 << 18, "n_bins": 256}),
+            ("sort", {"n": 1 << 19}),
+            ("attention", {"batch": 4, "seq": 128, "heads": 4,
+                           "dim": 64})]
+
+
+def _warm_and_measure(mix):
+    """Compile every workload's dedicated path under EVERY group's
+    device context (jit executables are cached per device); returns
+    (mean single-request service time — the rate scale, measured
+    cross-lane concurrency capacity — the shared-split pricing)."""
+    import threading
+
+    import jax
+
+    from repro.core.hybrid_executor import detect_platform
+    from repro.workloads import requests as adapters
+
+    groups, _ = detect_platform()
+    times = []
+    specs = []
+    for wl, payload in mix:
+        spec = adapters.make_request(wl, payload)
+        specs.append(spec)
+        for g in groups:
+            dev = g.devices[0] if g.devices else None
+            ctx = (jax.default_device(dev) if dev is not None
+                   else _null())
+            with ctx:
+                spec.run_one()                   # compile
+                t0 = time.perf_counter()
+                spec.run_one()
+                times.append(time.perf_counter() - t0)
+    t_service = float(np.mean(times))
+
+    # pairwise headroom, like overlap_check.concurrency_capacity: two
+    # pinned lanes each run the mix twice; capacity = concurrent
+    # throughput / one lane's (2.0 = perfect overlap, ~1.0 = fully
+    # contended) — prices the scheduler's shared-split candidate
+    def lane(g):
+        dev = g.devices[0] if g.devices else None
+        ctx = jax.default_device(dev) if dev is not None else _null()
+        with ctx:
+            for _ in range(2):
+                for s in specs:
+                    s.run_one()
+
+    pair = (groups * 2)[:2]
+    t0 = time.perf_counter()
+    lane(pair[0])
+    t_one = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ts = [threading.Thread(target=lane, args=(g,)) for g in pair]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    t_two = time.perf_counter() - t0
+    capacity = max(2.0 * t_one / max(t_two, 1e-9), 1e-3)
+    return t_service, capacity
+
+
+def _null():
+    from contextlib import nullcontext
+    return nullcontext()
+
+
+def make_trace(rate: float, n_requests: int, mix, seed: int = 0):
+    """Open-loop Poisson arrival trace: [(t_offset, workload, payload)].
+    The workload sequence is deterministic per seed so both schedulers
+    see byte-identical traffic."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    trace = []
+    for i in range(n_requests):
+        wl, payload = mix[int(rng.integers(len(mix)))]
+        trace.append((t, wl, payload))
+        t += float(rng.exponential(1.0 / rate))
+    return trace
+
+
+def drive(policy: str, trace, max_batch: int = 8,
+          window_s: float = 0.002, split_overhead_s: float = 1e-3,
+          shared_span_factor: float = 1.0):
+    """Run one trace through one scheduler; returns latency/accounting
+    metrics.  The queue is effectively unbounded so the comparison
+    measures queueing delay, not shed-rate differences."""
+    from repro.serve.request_queue import RequestRejected
+    from repro.serve.scheduler import Scheduler
+
+    import threading
+
+    sched = Scheduler(policy=policy, max_batch=max_batch,
+                      batch_window_s=window_s, max_queue=1 << 16,
+                      split_overhead_s=split_overhead_s,
+                      shared_span_factor=shared_span_factor)
+    futs = []
+    done_at = {}
+    done_lock = threading.Lock()
+
+    # completion must be stamped by the resolving thread, not by a
+    # sequential await loop after the whole submission phase — the
+    # latter records each request's *position in the trace* (an early
+    # 12 ms completion would show up as the full submission span)
+    def stamp(f):
+        with done_lock:
+            done_at[id(f)] = time.perf_counter()
+
+    t0 = time.perf_counter()
+    for t_arr, wl, payload in trace:
+        now = time.perf_counter() - t0
+        if t_arr > now:
+            time.sleep(t_arr - now)
+        f = sched.submit(wl, payload)
+        f.add_done_callback(stamp)
+        futs.append((time.perf_counter(), f))
+    lat, rejected = [], 0
+    for t_sub, f in futs:
+        try:
+            f.result(timeout=600)
+            lat.append(done_at[id(f)] - t_sub)
+        except RequestRejected:
+            rejected += 1
+    # makespan: trace start -> last completion (not the await loop)
+    wall = (max(done_at.values()) - t0) if done_at \
+        else time.perf_counter() - t0
+    sched.drain(timeout=60)
+    st = sched.stats
+    sched.shutdown()
+    arr = np.asarray(sorted(lat)) if lat else np.asarray([0.0])
+    # the accounting invariant: nothing vanishes without a rejection
+    accounted = (st.completed + st.failed + st.rejected_full
+                 + st.rejected_shutdown + st.shed_deadline)
+    return {
+        "policy": policy, "n": len(trace), "served": len(lat),
+        "rejected": rejected, "wall_s": wall,
+        "p50_ms": float(np.percentile(arr, 50)) * 1e3,
+        "p95_ms": float(np.percentile(arr, 95)) * 1e3,
+        "p99_ms": float(np.percentile(arr, 99)) * 1e3,
+        "throughput_rps": len(lat) / wall if wall > 0 else 0.0,
+        "batches": st.batches, "shared": st.shared,
+        "dedicated": st.dedicated, "probe_runs": st.probe_runs,
+        "dropped_without_rejection": st.submitted - accounted,
+    }
+
+
+# ---------------------------------------------------------------------------
+# two-process persisted-calibration check (PR 3 contract, serving layer)
+# ---------------------------------------------------------------------------
+_CHILD_CODE = r"""
+import json, os, sys
+sys.path.insert(0, os.path.join(os.environ["REPRO_ROOT"], "src"))
+from repro.serve.scheduler import Scheduler
+
+phase = sys.argv[1]
+sched = Scheduler(max_batch=1, batch_window_s=0.0, split_overhead_s=0.0)
+payload = {"size": 128, "ksize": 5}
+n = 3 if phase == "a" else 1
+for _ in range(n):
+    sched.submit("conv", payload).result(timeout=300)
+probes = sched.stats.probe_runs
+sched.shutdown()
+from repro.core.calibration import get_calibration_cache
+get_calibration_cache().flush()
+print("RESULT" + json.dumps({"probe_runs": probes}))
+"""
+
+
+def two_process_check(verbose: bool = True):
+    """Process A serves conv traffic against a fresh persistent
+    calibration store; process B starts cold on the same store and its
+    first scheduled call must plan with zero probe runs.  The model
+    prior and autotune search are disabled in both so the zero
+    demonstrates *persistence*, not priors."""
+    import tempfile
+
+    tmp = tempfile.mkdtemp(prefix="repro-serve-2proc-")
+    env = dict(os.environ)
+    env.update({
+        "REPRO_ROOT": _ROOT,
+        "REPRO_CALIB_CACHE": os.path.join(tmp, "calibration.json"),
+        "REPRO_TUNE_CACHE": os.path.join(tmp, "autotune.json"),
+        "REPRO_COST_MODEL": "0",
+        "REPRO_AUTOTUNE": "0",
+    })
+
+    def child(phase):
+        res = subprocess.run([sys.executable, "-c", _CHILD_CODE, phase],
+                             capture_output=True, text=True, timeout=560,
+                             env=env, cwd=_ROOT)
+        if res.returncode != 0:
+            raise RuntimeError(f"two-process child {phase} failed:\n"
+                               + res.stdout + res.stderr)
+        line = [ln for ln in res.stdout.splitlines()
+                if ln.startswith("RESULT")][0]
+        return json.loads(line[len("RESULT"):])
+
+    a = child("a")
+    b = child("b")
+    if verbose:
+        print(f"serving/cold_probe_runs_procA,{a['probe_runs']:.0f},"
+              f"fresh_store_probes")
+        print(f"serving/cold_probe_runs_procB,{b['probe_runs']:.0f},"
+              f"target=0_zero_probe_persisted_calibration")
+    return a["probe_runs"], b["probe_runs"]
+
+
+# ---------------------------------------------------------------------------
+def run(smoke: bool = False, json_out: bool = False,
+        n_requests: int = 0, two_process: bool = True):
+    mix = _mix(smoke)
+    n_requests = n_requests or (96 if smoke else 90)
+    t_service, capacity = _warm_and_measure(mix)
+    base_rate = 1.0 / max(t_service, 1e-6)      # one lane's capacity
+    # 0.5x/0.9x: both policies keep up (par is the pass bar there);
+    # 2.5x: far past one dedicated lane — only batching amortization
+    # (+ whatever parallel headroom the box has) is sustainable, and
+    # the open-loop backlog turns any shortfall into the latency tail
+    rate_mults = [0.5, 0.9, 2.5]
+    rates = [m * base_rate for m in rate_mults]
+    # price the shared-split candidate with the measured headroom
+    # (2/capacity: on a host with no cross-lane headroom a split's
+    # halves serialize, so its modeled makespan must double)
+    span_factor = max(1.0, 2.0 / capacity)
+    print(f"# t_service={t_service * 1e3:.2f}ms capacity={capacity:.2f}x "
+          f"shared_span_factor={span_factor:.2f}")
+
+    # Warm BOTH scheduler paths before anything is measured: the
+    # work-shared and batched executions compile chunk-slice shapes
+    # (per device) the dedicated warmup above never touches, and a
+    # cold compile landing inside a measured trace charges hundreds of
+    # ms to whichever policy hit it first — compile time is a property
+    # of the process, not of the scheduling policy under test.
+    warm = make_trace(base_rate, 4 * len(mix), mix, seed=3)
+    drive("cost", warm)
+    drive("cost", warm, max_batch=1)            # shared singles path
+    drive("fifo", warm, max_batch=1)
+
+    rows, results = [], {"t_service_s": t_service, "rates": [],
+                         "concurrency_capacity": capacity,
+                         "shared_span_factor": span_factor}
+    ratio_at_max = 0.0
+    dropped_total = 0
+    for i, rate in enumerate(rates):
+        trace = make_trace(rate, n_requests, mix, seed=7 + i)
+        fifo = drive("fifo", trace, max_batch=1)
+        cost = drive("cost", trace, shared_span_factor=span_factor)
+        dropped_total += (fifo["dropped_without_rejection"]
+                          + cost["dropped_without_rejection"])
+        tag = f"x{rate_mults[i]:g}_{MIX_VERSION}"
+        ratio = (fifo["p95_ms"] / cost["p95_ms"]
+                 if cost["p95_ms"] > 0 else float("inf"))
+        if i == len(rates) - 1:
+            ratio_at_max = ratio
+        rows += [
+            f"serving/p95_fifo_{tag},{fifo['p95_ms'] * 1e3:.0f},"
+            f"rate={rate:.1f}rps|p50={fifo['p50_ms']:.1f}ms|"
+            f"p99={fifo['p99_ms']:.1f}ms|served={fifo['served']}",
+            f"serving/p95_sched_{tag},{cost['p95_ms'] * 1e3:.0f},"
+            f"rate={rate:.1f}rps|p50={cost['p50_ms']:.1f}ms|"
+            f"p99={cost['p99_ms']:.1f}ms|served={cost['served']}|"
+            f"batches={cost['batches']}|shared={cost['shared']}|"
+            f"ratio_vs_fifo={ratio:.2f}x",
+            f"serving/tput_fifo_{tag},"
+            f"{1e6 / max(fifo['throughput_rps'], 1e-9):.0f},"
+            f"us_per_req|{fifo['throughput_rps']:.2f}rps",
+            f"serving/tput_sched_{tag},"
+            f"{1e6 / max(cost['throughput_rps'], 1e-9):.0f},"
+            f"us_per_req|{cost['throughput_rps']:.2f}rps",
+        ]
+        results["rates"].append({"rate_rps": rate, "fifo": fifo,
+                                 "sched": cost})
+    rows.append(f"serving/p95_ratio_at_max_{MIX_VERSION},"
+                f"{ratio_at_max * 1e6:.0f},"
+                f"fifo_p95/sched_p95={ratio_at_max:.2f}x|target>=1.2")
+    results["p95_ratio_at_max"] = ratio_at_max
+    results["dropped_without_rejection"] = dropped_total
+
+    probes_b = None
+    if two_process:
+        _, probes_b = two_process_check()
+        results["cold_probe_runs_procB"] = probes_b
+    for row in rows:
+        print(row)
+
+    if json_out:
+        import jax
+        meta = {"backend": jax.default_backend(),
+                "n_devices": len(jax.devices()), "smoke": smoke}
+        with open(os.path.join(_ROOT, "BENCH_serving.json"), "w") as f:
+            json.dump({"meta": meta, "results": results}, f, indent=1)
+        print(f"# wrote BENCH_serving.json")
+
+    import jax
+    n_dev = len(jax.devices())
+    ok = True
+    if dropped_total != 0:
+        print(f"serving_bench: FAIL — {dropped_total} request(s) dropped "
+              f"without a structured rejection")
+        ok = False
+    if probes_b is not None and probes_b != 0:
+        print(f"serving_bench: FAIL — process B paid {probes_b} probe "
+              f"run(s); persisted calibration must plan with zero")
+        ok = False
+    # the latency win needs real parallel lanes: on a single device
+    # the scheduler serializes executions (see Scheduler._lane_locks)
+    # and can at best roughly match FIFO, so the ratio gate only
+    # applies on >=2 devices (the CI smoke forces 2 host devices).
+    # The smoke gate is a guardrail (0.9: catch a catastrophic
+    # placement regression through short-trace tail noise); the full
+    # bench is the measurement the ≥1.2x target is read from.
+    if smoke and n_dev >= 2 and ratio_at_max < 0.9:
+        print(f"serving_bench: FAIL — scheduler p95 lost to FIFO at the "
+              f"highest rate ({ratio_at_max:.2f}x < 0.9)")
+        ok = False
+    elif smoke and n_dev < 2:
+        print(f"serving_bench: note — single device ({n_dev}), p95 ratio "
+              f"informational only")
+    print(f"serving_bench: {'PASS' if ok else 'FAIL'} "
+          f"(p95 ratio at max rate {ratio_at_max:.2f}x, "
+          f"dropped_without_rejection={dropped_total})")
+    return ok, results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI trace + hard invariant checks")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_serving.json")
+    ap.add_argument("--n-requests", type=int, default=0)
+    ap.add_argument("--no-two-process", action="store_true")
+    args = ap.parse_args()
+    ok, _ = run(smoke=args.smoke, json_out=args.json,
+                n_requests=args.n_requests,
+                two_process=not args.no_two_process)
+    sys.exit(0 if ok else 1)

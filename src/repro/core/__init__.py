@@ -20,4 +20,4 @@ from repro.core.async_executor import (AsyncChunkExecutor, Chunk,
                                        WorkStealingScheduler, make_chunks)
 from repro.core.hybrid_executor import (DeviceGroup, HybridExecutor,
                                         WorkSharedOutput, detect_platform)
-from repro.core.metrics import HybridResult, summarize
+from repro.core.metrics import EWMA, HybridResult, ServeStats, summarize

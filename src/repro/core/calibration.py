@@ -287,11 +287,21 @@ class CalibrationCache:
             fresh = e is None
             if fresh:
                 self._store[k] = _CacheEntry(unit_time)
+            elif not e.in_process:
+                # first in-process measurement REPLACES a disk-loaded
+                # value instead of EWMA-blending into it: another
+                # process's history may have been measured under
+                # contention or on different machine state, and a
+                # stale-slow estimate that only decays by alpha per
+                # observation starves the group for many calls (the
+                # serving scheduler routes by these numbers)
+                e.unit_time = unit_time
+                e.n_obs += 1
+                e.in_process = True
             else:
                 e.unit_time = (self.alpha * unit_time
                                + (1 - self.alpha) * e.unit_time)
                 e.n_obs += 1
-                e.in_process = True
             self._dirty = True
             if fresh or (time.monotonic() - self._last_flush
                          >= self.FLUSH_INTERVAL_S):

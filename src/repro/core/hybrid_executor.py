@@ -34,6 +34,7 @@ benchmarks can show how far reality is from the model.
 """
 from __future__ import annotations
 
+import threading
 import time
 from contextlib import nullcontext
 from dataclasses import dataclass
@@ -147,11 +148,18 @@ class HybridExecutor:
                                          time_model=time_model)
         self._cache_key: Optional[str] = None
         self._warm = False
+        # the serving scheduler shares ONE executor between concurrent
+        # worker threads: calibrate/run_work_shared mutate tracker,
+        # steal flags and warm state, so a work-shared call holds this
+        # lock end to end (re-entrant: calibrate inside a locked call)
+        self._call_lock = threading.RLock()
+        self.last_probe_runs = 0     # probe executions paid by the last
+        #                              calibrate() (0 = cache/model hit)
 
     # ------------------------------------------------------------------
     def calibrate(self, fn: Callable[[str, int], object], probe_units: int,
                   workload: Optional[str] = None, iters: int = 1,
-                  unit_cost=None) -> None:
+                  unit_cost=None, probe: bool = True) -> None:
         """Seed per-group throughput for a workload (paper §4.5).
 
         On a cache hit for every group the probe runs are skipped
@@ -162,47 +170,74 @@ class HybridExecutor:
         calibrates the plan but jit shapes are still cold here).
 
         ``unit_cost`` (a ``core.cost_model.CostTerms`` describing ONE
-        work unit) supplies a model-predicted prior on a cache miss, so
+        work unit, or a per-group-name dict of them for workloads whose
+        groups run *different algorithms* — spmv's ELL head vs COO
+        tail) supplies a model-predicted prior on a cache miss, so
         even a first-ever call plans without probes; the model's guess
         is never persisted — the first real chunks overwrite it with
         measurements.  On a miss without ``unit_cost`` (or with the
         model disabled) each group runs the probe ``1 + iters`` times
-        (one warmup so jit compilation never distorts the measurement).
+        (one warmup so jit compilation never distorts the measurement),
+        *under the group's pinned device context* — jit executables are
+        cached per device, and jax.default_device is part of the cache
+        key, so an unpinned probe would time (and warm) the main
+        thread's device for every group, leaving the other groups'
+        compiles inside the timed path and their probe timings wrong.
+        ``last_probe_runs`` reports how many groups actually probed
+        (0 = fully cache/model seeded: PR 3's zero-probe contract).
+
+        ``probe=False`` forbids probe runs entirely (the serving
+        scheduler's batched executions, where ``fn`` would re-execute a
+        member request): a group with neither a cache entry nor a model
+        prior is simply left unseeded — the plan starts symmetric and
+        work stealing absorbs the error within the first call.
         """
-        self.tracker.reset()
-        self._cache_key = workload
-        probe_units = max(int(probe_units), 1)
-        warm = True
-        for g in self.groups:
-            cached = (self.cache.get(workload, g.name, g.slowdown)
-                      if workload else None)
-            if cached is not None:
-                self.tracker.seed(g.name, cached)
-                warm = warm and self.cache.warmed_in_process(
-                    workload, g.name, g.slowdown)
-                continue
-            warm = False
-            if unit_cost is not None:
-                from repro.core import cost_model
-                if cost_model.enabled():
-                    t_unit = (cost_model.predict(unit_cost)
-                              * g.slowdown)
-                    self.tracker.seed(g.name, t_unit)
+        with self._call_lock:
+            self.tracker.reset()
+            self._cache_key = workload
+            probe_units = max(int(probe_units), 1)
+            warm = True
+            self.last_probe_runs = 0
+            for g in self.groups:
+                cached = (self.cache.get(workload, g.name, g.slowdown)
+                          if workload else None)
+                if cached is not None:
+                    self.tracker.seed(g.name, cached)
+                    warm = warm and self.cache.warmed_in_process(
+                        workload, g.name, g.slowdown)
                     continue
-            t = measure(lambda: fn(g.name, probe_units), warmup=1,
-                        iters=iters)
-            t *= g.slowdown
-            self.tracker.update(g.name, probe_units, t)
-            if workload:
-                self.cache.put(workload, g.name, t / probe_units,
-                               g.slowdown)
-        self._warm = warm
-        self.tracker.mark_planned()
+                warm = False
+                uc = (unit_cost.get(g.name)
+                      if isinstance(unit_cost, dict) else unit_cost)
+                if uc is not None:
+                    from repro.core import cost_model
+                    if cost_model.enabled():
+                        t_unit = cost_model.predict(uc) * g.slowdown
+                        self.tracker.seed(g.name, t_unit)
+                        continue
+                if not probe:
+                    continue
+                dev = g.devices[0] if g.devices else None
+                ctx = (jax.default_device(dev) if dev is not None
+                       else nullcontext())
+                with ctx:
+                    t = measure(lambda: fn(g.name, probe_units), warmup=1,
+                                iters=iters)
+                self.last_probe_runs += 1
+                t *= g.slowdown
+                self.tracker.update(g.name, probe_units, t)
+                if workload:
+                    self.cache.put(workload, g.name, t / probe_units,
+                                   g.slowdown)
+            self._warm = warm
+            self.tracker.mark_planned()
 
     def plan(self, total_units: int, comm_cost: float = 0.0,
-             post_cost: float = 0.0) -> work_sharing.WorkPlan:
+             post_cost: float = 0.0,
+             min_units: int = 0) -> work_sharing.WorkPlan:
         thr = self.tracker.throughputs([g.name for g in self.groups])
-        return work_sharing.plan_work(total_units, thr, comm_cost, post_cost)
+        return work_sharing.plan_work(total_units, thr, comm_cost, post_cost,
+                                      min_units=min_units)
 
     # ------------------------------------------------------------------
     def _mode(self) -> str:
@@ -218,7 +253,8 @@ class HybridExecutor:
                         plan_override: Optional[Sequence[int]] = None,
                         sequential: bool = False,
                         steal: Optional[bool] = None,
-                        whole_shares: bool = False) -> WorkSharedOutput:
+                        whole_shares: bool = False,
+                        min_units: int = 0) -> WorkSharedOutput:
         """Execute one work-shared computation, chunk-pipelined.
 
         run_share(group_name, start_unit, n_units) -> share output
@@ -236,9 +272,28 @@ class HybridExecutor:
         whole_shares: execute each group's share as ONE chunk (implies
         no stealing) — for suitability splits whose per-chunk shapes
         are data-dependent, where a uniform chunk grid would make
-        every chunk a fresh jit compile + packing in the timed path."""
+        every chunk a fresh jit compile + packing in the timed path.
+        min_units: floor every live group's share (the serving
+        scheduler's batched executions pass 1 so a group with a stale
+        slow estimate keeps executing — and correcting — its own
+        measurement instead of starving on its own history).
+
+        Thread-safe: the whole call holds the executor's re-entrant
+        call lock (a work-shared call needs every group anyway), so the
+        serving scheduler can share one executor between workers."""
+        with self._call_lock:
+            return self._run_work_shared_locked(
+                workload, total_units, run_share, combine, comm_cost,
+                post_cost, warmup, plan_override, sequential, steal,
+                whole_shares, min_units)
+
+    def _run_work_shared_locked(self, workload, total_units, run_share,
+                                combine, comm_cost, post_cost, warmup,
+                                plan_override, sequential, steal,
+                                whole_shares, min_units) -> WorkSharedOutput:
         cache_key = self._cache_key or workload
-        plan = self.plan(total_units, comm_cost, post_cost)
+        plan = self.plan(total_units, comm_cost, post_cost,
+                         min_units=min_units)
         chunk_units = max(total_units // self.n_chunks, 1)
         if plan_override is not None:
             units = list(plan_override)

@@ -1,13 +1,102 @@
-"""The paper's §5.1 evaluation metrics: gain and idle time.
+"""The paper's §5.1 evaluation metrics: gain and idle time — plus the
+serving subsystem's load telemetry.
 
 gain       = (best single-device time - hybrid time) / best single time
 idle_i     = fraction of the hybrid makespan device i spent not computing
 efficiency = 1 - mean(idle)          (paper reports ~90% on average)
+
+``ServeStats`` is the scheduler's exported counter/EWMA block: every
+admission-control and placement decision increments exactly one
+counter, so ``submitted == completed + rejected + shed + in-flight``
+is an auditable invariant (the serving benchmark asserts it — a
+request dropped *without* a structured rejection is a bug, not load).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import threading
+from dataclasses import dataclass, field
 from typing import Dict, List, Sequence
+
+
+class EWMA:
+    """Thread-safe exponentially weighted moving average (load
+    telemetry: queue depth, wait, service time)."""
+
+    def __init__(self, alpha: float = 0.2):
+        self.alpha = alpha
+        self._value = 0.0
+        self._n = 0
+        self._lock = threading.Lock()
+
+    def observe(self, x: float) -> None:
+        with self._lock:
+            self._value = (x if self._n == 0
+                           else self.alpha * x
+                           + (1 - self.alpha) * self._value)
+            self._n += 1
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+    @property
+    def n(self) -> int:
+        with self._lock:
+            return self._n
+
+
+@dataclass
+class ServeStats:
+    """Scheduler load telemetry.  Counters are written under the
+    scheduler's lock; the EWMAs are internally thread-safe."""
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0                  # execution raised; future rejected
+    rejected_full: int = 0           # queue_full admission rejections
+    rejected_shutdown: int = 0
+    shed_deadline: int = 0           # expired or unmeetable deadlines
+    batches: int = 0                 # coalesced executions (>=2 requests)
+    batched_requests: int = 0        # requests that rode in a batch
+    dedicated: int = 0               # executions placed on one group
+    shared: int = 0                  # executions work-shared (paper split)
+    probe_runs: int = 0              # calibration probe executions paid
+    queue_depth: EWMA = field(default_factory=EWMA)
+    wait_s: EWMA = field(default_factory=EWMA)       # submit -> start
+    service_s: EWMA = field(default_factory=EWMA)    # start -> resolve
+    latency_s: EWMA = field(default_factory=EWMA)    # submit -> resolve
+
+    @property
+    def in_flight(self) -> int:
+        return (self.submitted - self.completed - self.failed
+                - self.rejected_full - self.rejected_shutdown
+                - self.shed_deadline)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "submitted": self.submitted, "completed": self.completed,
+            "failed": self.failed, "rejected_full": self.rejected_full,
+            "rejected_shutdown": self.rejected_shutdown,
+            "shed_deadline": self.shed_deadline,
+            "batches": self.batches,
+            "batched_requests": self.batched_requests,
+            "dedicated": self.dedicated, "shared": self.shared,
+            "probe_runs": self.probe_runs,
+            "in_flight": self.in_flight,
+            "queue_depth_ewma": self.queue_depth.value,
+            "wait_ewma_s": self.wait_s.value,
+            "service_ewma_s": self.service_s.value,
+            "latency_ewma_s": self.latency_s.value,
+        }
+
+    def row(self) -> str:
+        return (f"serve: submitted={self.submitted} "
+                f"completed={self.completed} failed={self.failed} "
+                f"rejected={self.rejected_full + self.rejected_shutdown} "
+                f"shed={self.shed_deadline} batches={self.batches} "
+                f"dedicated={self.dedicated} shared={self.shared} "
+                f"depth~{self.queue_depth.value:.1f} "
+                f"latency~{self.latency_s.value * 1e3:.1f}ms")
 
 
 @dataclass(frozen=True)

@@ -1,12 +1,21 @@
 """Production serving launcher: batched generation for an assigned arch.
 
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm3-4b \
-        --batch 4 --new-tokens 16 [--hybrid]
+        --batch 4 --new-tokens 16 [--hybrid | --stream]
 
-``--hybrid`` splits the request batch across the detected device groups
+``--hybrid`` splits ONE request batch across the detected device groups
 through the chunk-pipelined HybridExecutor (rows = work units), so on a
 multi-device host the shares decode concurrently and the report shows
-measured vs model makespan."""
+measured vs model makespan.
+
+``--stream`` drives the full serving subsystem instead: a synthetic
+open-loop arrival trace (Poisson inter-arrivals at ``--rate`` req/s for
+``--duration`` seconds) submitted to the ``repro.serve.Scheduler``,
+which places each request (dedicated / work-shared / queued) from the
+cost model, coalesces same-shape arrivals, and sheds what misses
+``--deadline``.  Prints per-request latency percentiles and the
+scheduler's load telemetry.
+"""
 from __future__ import annotations
 
 import argparse
@@ -14,10 +23,75 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import registry
 from repro.models import model_zoo, param
 from repro.serve.serve_step import generate
+
+
+def _percentiles(xs):
+    if not xs:
+        return {}
+    arr = np.asarray(sorted(xs))
+    return {p: float(np.percentile(arr, p)) for p in (50, 95, 99)}
+
+
+def run_stream(cfg, params, args) -> None:
+    """Open-loop arrival trace through the serving scheduler."""
+    from repro.serve.scheduler import Scheduler
+    from repro.serve.request_queue import RequestRejected
+    from repro.workloads import requests as adapters
+
+    wl = adapters.make_lm_adapter(cfg, params, prompt_len=args.prompt_len,
+                                  new_tokens=args.new_tokens)
+    sched = Scheduler(max_batch=args.max_batch,
+                      batch_window_s=args.window_ms / 1e3)
+    # one warmup request outside the measured trace: jit compilation is
+    # a property of the process, not of the scheduler under test
+    sched.submit(wl, {"batch": args.batch}).result(timeout=600)
+
+    import threading
+
+    rng = np.random.default_rng(0)
+    futs = []
+    done_at = {}
+    done_lock = threading.Lock()
+
+    def stamp(f):
+        with done_lock:
+            done_at[id(f)] = time.perf_counter()
+
+    t_end = time.perf_counter() + args.duration
+    t0 = time.perf_counter()
+    while time.perf_counter() < t_end:
+        f = sched.submit(wl, {"batch": args.batch},
+                         deadline=args.deadline)
+        # completion stamped by the resolving thread: awaiting futures
+        # in submission order would record trace position, not latency
+        f.add_done_callback(stamp)
+        futs.append((time.perf_counter(), f))
+        # open-loop: the NEXT arrival does not wait for this result
+        time.sleep(float(rng.exponential(1.0 / max(args.rate, 1e-6))))
+    lat, rejected = [], 0
+    for t_sub, f in futs:
+        try:
+            f.result(timeout=600)
+            lat.append(done_at[id(f)] - t_sub)
+        except RequestRejected:
+            rejected += 1
+    wall = (max(done_at.values()) - t0) if done_at \
+        else time.perf_counter() - t0
+    sched.shutdown()
+    pct = _percentiles(lat)
+    print(f"{cfg.name}: {len(futs)} requests over {wall:.1f}s "
+          f"(rate {args.rate}/s), {len(lat)} served, {rejected} "
+          f"rejected/shed")
+    if pct:
+        print(f"latency p50={pct[50] * 1e3:.1f}ms "
+              f"p95={pct[95] * 1e3:.1f}ms p99={pct[99] * 1e3:.1f}ms "
+              f"throughput={len(lat) / wall:.2f} req/s")
+    print(sched.stats.row())
 
 
 def main(argv=None):
@@ -29,6 +103,17 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--hybrid", action="store_true",
                     help="work-share the batch across device groups")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive the serving scheduler with a synthetic "
+                         "open-loop arrival trace")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="--stream mean arrival rate, requests/s")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="--stream trace length, seconds")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="--stream per-request deadline, seconds")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--window-ms", type=float, default=2.0)
     args = ap.parse_args(argv)
 
     cfg = registry.get(args.arch)
@@ -38,12 +123,18 @@ def main(argv=None):
         raise SystemExit("enc-dec serving: see tests/test_archs.py whisper "
                          "decode path")
     params = param.values(model_zoo.init(cfg, jax.random.key(0)))
+
+    if args.stream:
+        run_stream(cfg, params, args)
+        return
+
     prompt = jax.random.randint(jax.random.key(1),
                                 (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
     cache_len = args.prompt_len + args.new_tokens + 1
 
     if args.hybrid:
+        from repro.core.cost_model import CostTerms
         from repro.core.hybrid_executor import HybridExecutor
 
         ex = HybridExecutor(n_chunks=min(4, args.batch))
@@ -54,9 +145,20 @@ def main(argv=None):
             out.block_until_ready()
             return out
 
+        # Calibration threads the group through ex.calibrate the way
+        # workloads/conv.py does: the executor pins each group's device
+        # context around its probe (an unpinned probe timed — and
+        # warmed — the main thread's device for every group) and the
+        # decode-roofline unit_cost prior lets a cold cache plan with
+        # zero probe runs, so no group ever decodes rows it doesn't own
+        # inside the timed path.
+        n_params = sum(int(np.prod(x.shape))
+                       for x in jax.tree_util.tree_leaves(params))
+        unit_cost = CostTerms(flops=2.0 * n_params * (args.new_tokens + 1),
+                              bytes=4.0 * n_params, compute="matmul")
         ex.calibrate(lambda g, k: run_share(g, 0, k),
                      probe_units=max(args.batch // 2, 1),
-                     workload=f"serve/{cfg.name}")
+                     workload=f"serve/{cfg.name}", unit_cost=unit_cost)
         t0 = time.perf_counter()
         ws = ex.run_work_shared(
             f"serve/{cfg.name}", args.batch, run_share,

@@ -1,0 +1,660 @@
+"""Continuous-stream request scheduler over hybrid device groups.
+
+This is the fleet-level application of the paper's thesis: the unit of
+scheduling is no longer one work-shared call but a *stream* of
+concurrent, heterogeneous requests, and for each one the scheduler
+decides — from the PR-3 cost model and calibrated unit times — whether
+to **dedicate** a device group (co-scheduling different requests on
+different groups simultaneously), **work-share** it across all groups
+(the §5.4.3 split, only when the projected makespan win exceeds the
+split overhead), or let it **queue** behind the lane with the earliest
+projected completion.
+
+Architecture (all threads named ``serve-*`` for teardown auditing):
+
+* ``submit()`` → bounded ``RequestQueue`` (admission control: a full
+  queue is an immediate structured rejection, never a hang).
+* one **dispatcher** thread pops requests, coalesces same-(workload,
+  shape-bucket) arrivals inside a short batching window into one
+  execution, scores placement against every group's projected-free
+  time, sheds deadline-infeasible work, and hands executions to lanes.
+* one **lane worker per group** executes dedicated placements pinned to
+  the group's primary device; one **shared lane** worker executes
+  work-shared placements through the (now lock-protected, shareable)
+  ``HybridExecutor``.  Lane workers synchronize through per-group
+  locks: a shared execution takes every group lock (sorted order — no
+  deadlock), a dedicated one takes only its own, so dedicated work on
+  group A genuinely overlaps dedicated work on group B.
+
+Every execution updates the persistent ``CalibrationCache`` with the
+measured seconds/unit for (workload, group), so placement *learns* each
+workload's device affinity online — the 2.5-14x per-kernel spread of
+Lee et al. is rediscovered from the scheduler's own traffic, and a
+fresh process inherits it from disk (first scheduled call plans with
+zero probes, PR 3's cold-start contract).
+
+Lifecycle: ``start()`` (implicit on first submit) → ``drain()`` (stop
+admitting, finish everything accepted, every future resolved exactly
+once) → ``shutdown()`` (drain + join all threads).  Env knobs:
+``REPRO_SERVE_QUEUE`` (depth, default 256), ``REPRO_SERVE_WINDOW_MS``
+(batch window, default 2), ``REPRO_SERVE_MAX_BATCH`` (default 8).
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+import weakref
+from contextlib import nullcontext
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.hybrid_executor import (DeviceGroup, HybridExecutor,
+                                        detect_platform)
+from repro.core.metrics import ServeStats
+from repro.serve.placement import (SHARED, GroupLoad, PlacementDecision,
+                                   deadline_feasible, plan_placement)
+from repro.serve.request_queue import (Rejection, Request, RequestQueue,
+                                       ServeFuture)
+
+_SHARED_LANE = "__shared__"
+
+# live schedulers, so test teardown can stop anything a failing test
+# leaked (tests/conftest.py joins serve-* threads through this)
+_LIVE: "weakref.WeakSet[Scheduler]" = weakref.WeakSet()
+
+
+def shutdown_all(timeout: float = 10.0) -> None:
+    """Stop every live scheduler (test teardown hook)."""
+    for s in list(_LIVE):
+        try:
+            s.shutdown(timeout=timeout, abort=True)
+        except Exception:
+            pass
+
+
+def _env_float(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, default))
+    except ValueError:
+        return default
+
+
+@dataclass
+class _Execution:
+    """One unit of lane work: a single request or a coalesced batch."""
+    requests: List[Request]
+    specs: List[object]              # RequestSpec per request
+    decision: PlacementDecision
+    t_dispatch: float = 0.0
+    est_span: float = 0.0
+
+    @property
+    def n_units(self) -> int:
+        return sum(max(int(s.total_units), 1) for s in self.specs)
+
+
+class Scheduler:
+    """Hybrid serving scheduler.  See module docstring.
+
+    ``spec_factory(workload, payload) -> RequestSpec`` resolves
+    payloads to executable specs; the default is the workload adapter
+    registry in ``repro.workloads.requests``.  ``policy`` is "cost"
+    (placement arbitration) or "fifo" (benchmark baseline: every
+    request dedicated to one fixed group, no batching, no sharing).
+    ``failure_injector`` (``ft.failure.FailureInjector``) kills/revives
+    groups at dispatch steps, for fault-path tests."""
+
+    def __init__(self, groups: Optional[List[DeviceGroup]] = None,
+                 executor: Optional[HybridExecutor] = None,
+                 spec_factory: Optional[Callable] = None,
+                 max_queue: Optional[int] = None,
+                 batch_window_s: Optional[float] = None,
+                 max_batch: Optional[int] = None,
+                 n_chunks: int = 8,
+                 split_overhead_s: float = 0.0,
+                 shared_span_factor: float = 1.0,
+                 policy: str = "cost",
+                 fifo_group: Optional[str] = None,
+                 failure_injector=None,
+                 explore_every: int = 16,
+                 clock: Callable[[], float] = time.monotonic):
+        if executor is not None:
+            self._ex = executor
+        else:
+            if groups is None:
+                groups, _ = detect_platform()
+            self._ex = HybridExecutor(groups=groups, n_chunks=n_chunks)
+        self.groups = self._ex.groups
+        self._spec_factory = spec_factory
+        self.clock = clock
+        self.policy = policy
+        self.fifo_group = fifo_group or self.groups[0].name
+        self.split_overhead_s = split_overhead_s
+        # measured cross-lane headroom pricing for the shared
+        # candidate (see placement.plan_placement): 1.0 = perfect
+        # overlap; 2/concurrency_capacity on contended hosts
+        self.shared_span_factor = max(float(shared_span_factor), 1e-9)
+        if max_queue is None:
+            max_queue = int(_env_float("REPRO_SERVE_QUEUE", 256))
+        if batch_window_s is None:
+            batch_window_s = _env_float("REPRO_SERVE_WINDOW_MS", 2.0) / 1e3
+        if max_batch is None:
+            max_batch = int(_env_float("REPRO_SERVE_MAX_BATCH", 8))
+        self.batch_window_s = max(batch_window_s, 0.0)
+        self.max_batch = max(int(max_batch), 1)
+        self._queue = RequestQueue(max_queue, clock=clock)
+        self.stats = ServeStats()
+        self._injector = failure_injector
+        self._step = 0
+        # anti-starvation exploration: a lane whose cached estimate
+        # says "slow" never gets traffic, so the estimate never heals —
+        # a transient bad measurement (contention, GC pause, stale disk
+        # entry) would starve the lane forever.  Every ``explore_every``
+        # dispatches of a workload, a lane that hasn't executed it
+        # since then gets one dedicated request to refresh its number.
+        self.explore_every = max(int(explore_every), 0)
+        self._wl_dispatches: Dict[str, int] = {}
+        self._wl_last_exec: Dict[tuple, int] = {}
+
+        self._lock = threading.Lock()          # stats + group loads
+        self._idle = threading.Condition(self._lock)
+        self._loads: Dict[str, GroupLoad] = {
+            g.name: GroupLoad(g.name, None) for g in self.groups}
+        self._group_locks = {g.name: threading.Lock() for g in self.groups}
+        self._lanes: Dict[str, "queue.Queue"] = {
+            g.name: queue.Queue() for g in self.groups}
+        self._lanes[_SHARED_LANE] = queue.Queue()
+        self._threads: List[threading.Thread] = []
+        self._started = False
+        self._draining = False
+        self._stopped = False
+        _LIVE.add(self)
+
+    # -- lifecycle ------------------------------------------------------
+    def start(self) -> "Scheduler":
+        with self._lock:
+            if self._started or self._stopped:
+                return self
+            self._started = True
+        self._threads = [threading.Thread(
+            target=self._dispatch_loop, name="serve-dispatch", daemon=True)]
+        for g in self.groups:
+            self._threads.append(threading.Thread(
+                target=self._group_worker, args=(g,),
+                name=f"serve-{g.name}", daemon=True))
+        self._threads.append(threading.Thread(
+            target=self._shared_worker, name="serve-shared", daemon=True))
+        for t in self._threads:
+            t.start()
+        return self
+
+    def drain(self, timeout: Optional[float] = 30.0) -> bool:
+        """Stop admitting, run everything already accepted, resolve
+        every in-flight future exactly once.  True when fully idle
+        within ``timeout``."""
+        with self._lock:
+            self._draining = True
+        self._queue.close()
+        if not self._started:
+            # nothing was ever dispatched; reject whatever queued
+            self._reject_remaining("shutdown")
+            return True
+        deadline = None if timeout is None else self.clock() + timeout
+        with self._idle:
+            while True:
+                if (len(self._queue) == 0 and self.stats.in_flight == 0
+                        and all(q.empty() for q in self._lanes.values())):
+                    return True
+                wait = (None if deadline is None
+                        else deadline - self.clock())
+                if wait is not None and wait <= 0:
+                    return False
+                self._idle.wait(wait if wait is None or wait < 0.2
+                                else 0.2)
+
+    def shutdown(self, timeout: Optional[float] = 30.0,
+                 abort: bool = False) -> None:
+        """Drain (or abort: reject what never started) and join every
+        scheduler thread."""
+        with self._lock:
+            if self._stopped:
+                return
+            self._draining = True
+        self._queue.close()
+        if abort:
+            self._reject_remaining("shutdown")
+        else:
+            self.drain(timeout)
+        with self._lock:
+            self._stopped = True
+        for lane in self._lanes.values():
+            lane.put(None)
+        # wake the dispatcher (close() already notified; idempotent)
+        self._queue.close()
+        for t in self._threads:
+            t.join(timeout)
+        self._threads = []
+
+    def __enter__(self) -> "Scheduler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def _reject_remaining(self, reason: str) -> None:
+        for r in self._queue.drain_remaining():
+            if r.reject(Rejection(reason, r.workload,
+                                  detail="scheduler shut down")):
+                with self._lock:
+                    self.stats.rejected_shutdown += 1
+
+    # -- submission -----------------------------------------------------
+    def submit(self, workload: str, payload=None,
+               deadline: Optional[float] = None,
+               priority: int = 0) -> ServeFuture:
+        """Enqueue one request.  ``deadline`` is seconds from now; a
+        request that cannot (or did not) finish in time resolves with a
+        structured ``RequestRejected`` instead of hanging.  Never
+        blocks: admission control answers immediately."""
+        self.start()
+        now = self.clock()
+        req = Request(workload=workload, payload=payload,
+                      priority=priority, deadline_s=deadline,
+                      t_submit=now,
+                      t_deadline=None if deadline is None
+                      else now + max(deadline, 0.0))
+        with self._lock:
+            self.stats.submitted += 1
+            if self._draining or self._stopped:
+                self.stats.rejected_shutdown += 1
+                req.reject(Rejection("shutdown", workload,
+                                     detail="scheduler is draining"))
+                return req.future
+        try:
+            spec = self._make_spec(workload, payload)
+        except Exception as e:
+            with self._lock:
+                self.stats.failed += 1
+            req.future._reject(e)
+            return req.future
+        req.bucket = spec.bucket or workload
+        req.n_units = max(int(spec.total_units), 1)
+        req.payload = spec                      # dispatcher reads the spec
+        rej = self._queue.push(req)
+        with self._lock:
+            if rej is not None:
+                self.stats.rejected_full += 1
+            self.stats.queue_depth.observe(len(self._queue))
+        return req.future
+
+    def _make_spec(self, workload: str, payload):
+        if self._spec_factory is not None:
+            return self._spec_factory(workload, payload)
+        from repro.workloads import requests as adapters
+        return adapters.make_request(workload, payload)
+
+    # -- dispatcher -----------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        while True:
+            req, shed = self._queue.pop(timeout=0.1)
+            if shed:
+                with self._idle:
+                    self.stats.shed_deadline += len(shed)
+                    self._idle.notify_all()
+            if req is None:
+                if self._queue.closed and len(self._queue) == 0:
+                    return
+                continue
+            batch = [req]
+            if self.policy == "cost" and self.max_batch > 1:
+                batch += self._queue.pop_matching(
+                    req.workload, req.bucket, self.max_batch - 1)
+                # linger for the window ONLY while nothing else waits:
+                # holding a non-matching request hostage to fill this
+                # batch is head-of-line blocking (measured: a 2 ms
+                # linger per cycle serialized dispatch into the p50 at
+                # high arrival rates)
+                if (len(batch) < self.max_batch
+                        and self.batch_window_s > 0
+                        and not self._queue.closed
+                        and len(self._queue) == 0):
+                    time.sleep(self.batch_window_s)
+                    batch += self._queue.pop_matching(
+                        req.workload, req.bucket,
+                        self.max_batch - len(batch))
+            self._dispatch(batch)
+
+    def _apply_injection(self) -> None:
+        if self._injector is None:
+            return
+        kill, revive = self._injector.at_step(self._step)
+        with self._lock:
+            if kill and kill in self._loads:
+                self._loads[kill].alive = False
+            if revive and revive in self._loads:
+                self._loads[revive].alive = True
+
+    def _dispatch(self, batch: List[Request]) -> None:
+        self._apply_injection()
+        self._step += 1
+        specs = [r.payload for r in batch]
+        n_units = sum(max(int(s.total_units), 1) for s in specs)
+        now = self.clock()
+
+        with self._lock:
+            loads = [GroupLoad(ld.name,
+                               self._unit_time(specs[0], ld.name),
+                               ld.busy_until, ld.alive)
+                     for ld in self._loads.values()]
+        if self.policy == "fifo":
+            loads = [ld for ld in loads if ld.name == self.fifo_group]
+        decision = plan_placement(
+            n_units, loads, now,
+            split_overhead_s=self.split_overhead_s,
+            # a coalesced batch's units are whole requests — sharing
+            # them is exactly co-scheduling, allowed; single tiny
+            # requests may still prefer a dedicated lane on their own
+            allow_shared=(self.policy == "cost" and len(loads) >= 2),
+            shared_span_factor=self.shared_span_factor)
+        if decision is None:
+            for r in batch:
+                if r.reject(Rejection("shutdown", r.workload,
+                                      detail="no alive device group")):
+                    with self._idle:
+                        self.stats.failed += 1
+                        self._idle.notify_all()
+            return
+        decision = self._maybe_explore(specs[0].workload, loads, decision,
+                                       n_units, now)
+
+        # deadline-based shedding at admission: members whose deadline
+        # the projected completion already misses are rejected now
+        kept: List[Request] = []
+        for r in batch:
+            if deadline_feasible(decision, now, r.t_deadline):
+                kept.append(r)
+                continue
+            if r.reject(Rejection(
+                    "deadline", r.workload,
+                    detail=f"projected finish +"
+                           f"{decision.t_finish - now:.4f}s misses "
+                           f"deadline {r.deadline_s:.4f}s",
+                    deadline_s=r.deadline_s,
+                    waited_s=now - r.t_submit)):
+                with self._idle:
+                    self.stats.shed_deadline += 1
+                    self._idle.notify_all()
+        if not kept:
+            return
+        ex = _Execution([r for r in kept], [r.payload for r in kept],
+                        decision, t_dispatch=now,
+                        est_span=decision.est_exec_s)
+        with self._lock:
+            if len(kept) > 1:
+                self.stats.batches += 1
+                self.stats.batched_requests += len(kept)
+            for name in decision.groups:
+                ld = self._loads[name]
+                ld.busy_until = max(ld.busy_until, now) + ex.est_span
+        wl = specs[0].workload
+        n_disp = self._wl_dispatches.get(wl, 0) + 1
+        self._wl_dispatches[wl] = n_disp
+        for name in decision.groups:
+            self._wl_last_exec[(wl, name)] = n_disp
+        if decision.kind == SHARED:
+            self._lanes[_SHARED_LANE].put(ex)
+        else:
+            self._lanes[decision.groups[0]].put(ex)
+
+    def _maybe_explore(self, wl: str, loads, decision: PlacementDecision,
+                       n_units: int, now: float) -> PlacementDecision:
+        """Override a placement with a dedicated run on a starved lane
+        (no execution of this workload in the last ``explore_every``
+        dispatches): the measurement it produces replaces the stale
+        estimate, at a bounded ~1/explore_every cost if the estimate
+        turns out to be right after all."""
+        if (self.policy != "cost" or self.explore_every <= 0
+                or len(loads) < 2):
+            return decision
+        n_disp = self._wl_dispatches.get(wl, 0)
+        if n_disp < self.explore_every:
+            return decision
+        for ld in loads:
+            if not ld.alive or ld.name in decision.groups:
+                continue
+            if (n_disp - self._wl_last_exec.get((wl, ld.name), 0)
+                    >= self.explore_every):
+                start = max(now, ld.busy_until)
+                span = n_units * (ld.unit_time or 0.0)
+                return PlacementDecision(
+                    "dedicated", [ld.name], start, start + span, span,
+                    queued_behind_s=start - now,
+                    alternatives=decision.alternatives)
+        return decision
+
+    def _unit_time(self, spec, group_name: str) -> Optional[float]:
+        """sec/unit estimate for placement: calibration cache first
+        (measured affinity, possibly from a previous process), then the
+        cost-model prior, else None (probe-only workloads fall back to
+        symmetric placement until their first measured execution)."""
+        g = next(g for g in self.groups if g.name == group_name)
+        cached = self._ex.cache.get(spec.workload, group_name, g.slowdown)
+        if cached is not None:
+            return cached
+        uc = getattr(spec, "unit_cost", None)
+        if isinstance(uc, dict):
+            uc = uc.get(group_name)
+        if uc is not None:
+            from repro.core import cost_model
+            if cost_model.enabled():
+                return cost_model.predict(uc) * g.slowdown
+        return None
+
+    # -- lane workers ---------------------------------------------------
+    def _lane_locks(self, name: Optional[str]) -> List[threading.Lock]:
+        """Locks an execution must hold.  Shared executions (name None)
+        take every group; so do *dedicated* executions on a simulated
+        platform — the groups share one physical device there, and two
+        'concurrent' lanes would just contend for the same cores (the
+        1-device serving bench measured the scheduler losing to FIFO
+        0.56x before this): placement still arbitrates order and
+        batching, but execution honestly serializes.  Sorted order
+        everywhere — no deadlock."""
+        if name is None or getattr(self._ex, "simulated", False):
+            return [self._group_locks[n] for n in sorted(self._group_locks)]
+        return [self._group_locks[name]]
+
+    def _group_worker(self, g: DeviceGroup) -> None:
+        lane = self._lanes[g.name]
+        while True:
+            ex = lane.get()
+            if ex is None:
+                return
+            locks = self._lane_locks(g.name)
+            for lk in locks:
+                lk.acquire()
+            try:
+                self._run_dedicated(ex, g)
+            finally:
+                for lk in reversed(locks):
+                    lk.release()
+
+    def _shared_worker(self) -> None:
+        lane = self._lanes[_SHARED_LANE]
+        while True:
+            ex = lane.get()
+            if ex is None:
+                return
+            locks = self._lane_locks(None)
+            for lk in locks:
+                lk.acquire()
+            try:
+                self._run_shared(ex)
+            finally:
+                for lk in reversed(locks):
+                    lk.release()
+
+    @staticmethod
+    def _device_ctx(g: DeviceGroup):
+        import jax
+        dev = g.devices[0] if g.devices else None
+        return jax.default_device(dev) if dev is not None else nullcontext()
+
+    def _shed_expired(self, ex: _Execution) -> List[int]:
+        """Last-chance deadline check at execution start; returns kept
+        member indices."""
+        now = self.clock()
+        kept = []
+        for i, r in enumerate(ex.requests):
+            if r.t_deadline is not None and now > r.t_deadline:
+                if r.reject(Rejection(
+                        "deadline", r.workload,
+                        detail=f"deadline {r.deadline_s:.4f}s passed in "
+                               f"lane queue",
+                        deadline_s=r.deadline_s,
+                        waited_s=now - r.t_submit)):
+                    with self._idle:
+                        self.stats.shed_deadline += 1
+                        self._idle.notify_all()
+            else:
+                kept.append(i)
+        return kept
+
+    def _run_dedicated(self, ex: _Execution, g: DeviceGroup) -> None:
+        kept = self._shed_expired(ex)
+        t0 = self.clock()
+        done_units = 0
+        try:
+            with self._device_ctx(g):
+                for i in kept:
+                    r, spec = ex.requests[i], ex.specs[i]
+                    ts = self.clock()
+                    value = spec.run_one()
+                    done_units += max(int(spec.total_units), 1)
+                    self._resolve(r, value, ts)
+        except BaseException as e:                 # noqa: BLE001
+            for i in kept:
+                if ex.requests[i].future._reject(e):
+                    with self._idle:
+                        self.stats.failed += 1
+                        self._idle.notify_all()
+        elapsed = self.clock() - t0
+        if done_units > 0 and elapsed > 0:
+            self._ex.cache.put(ex.specs[0].workload, g.name,
+                               elapsed * g.slowdown / done_units,
+                               g.slowdown)
+        self._finish_lane([g.name], ex, elapsed, dedicated=True)
+
+    def _run_shared(self, ex: _Execution) -> None:
+        kept = self._shed_expired(ex)
+        if not kept:
+            self._finish_lane([g.name for g in self.groups], ex, 0.0,
+                              dedicated=False, count=False)
+            return
+        t0 = self.clock()
+        try:
+            if len(kept) == 1:
+                spec = ex.specs[kept[0]]
+                value = self._run_shared_single(spec)
+                self._resolve(ex.requests[kept[0]], value, t0)
+            else:
+                self._run_shared_batch(ex, kept, t0)
+        except BaseException as e:                 # noqa: BLE001
+            for i in kept:
+                if ex.requests[i].future._reject(e):
+                    with self._idle:
+                        self.stats.failed += 1
+                        self._idle.notify_all()
+        self._finish_lane([g.name for g in self.groups], ex,
+                          self.clock() - t0, dedicated=False)
+
+    def _run_shared_single(self, spec):
+        ex = self._ex
+        ex.calibrate(lambda g, k: spec.run_share(g, 0, k),
+                     probe_units=max(spec.total_units // 8, 1),
+                     workload=spec.workload,
+                     unit_cost=getattr(spec, "unit_cost", None))
+        with self._lock:
+            self.stats.probe_runs += ex.last_probe_runs
+        out = ex.run_work_shared(
+            spec.workload, spec.total_units, spec.run_share,
+            spec.combine, comm_cost=spec.comm_cost,
+            whole_shares=spec.whole_shares, steal=spec.steal)
+        return out.value
+
+    def _run_shared_batch(self, ex: _Execution, kept: List[int],
+                          t0: float) -> None:
+        """Coalesced execution: the batch members ARE the work units —
+        the work-share splits whole requests across the groups (each
+        member runs entirely on one group: exact per-request demux, no
+        cross-request state), amortizing planning, lane arbitration and
+        dispatch over the window."""
+        specs = [ex.specs[i] for i in kept]
+        spec0 = specs[0]
+        key = f"{spec0.workload}@batch"
+
+        def run_share(group, start, k):
+            return [specs[j].run_one() for j in range(start, start + k)]
+
+        def combine(outs):
+            return [v for part in outs for v in part]
+
+        uc = getattr(spec0, "unit_cost", None)
+        uc = _scale_unit_cost(uc, max(int(spec0.total_units), 1))
+        hx = self._ex
+        # probe=False + warmup=False: a batch member must execute
+        # exactly once — probes/warmup would re-run requests (members
+        # are whole requests, not re-executable slices of one)
+        hx.calibrate(lambda g, k: run_share(g, 0, k), probe_units=1,
+                     workload=key, unit_cost=uc, probe=False)
+        # min_units=1: every live group keeps measuring its own batch
+        # throughput (a stale slow estimate must not starve a lane out
+        # of the split it would need to correct itself)
+        out = hx.run_work_shared(key, len(specs), run_share, combine,
+                                 comm_cost=spec0.comm_cost, warmup=False,
+                                 min_units=1)
+        for j, i in enumerate(kept):
+            self._resolve(ex.requests[i], out.value[j], t0)
+
+    def _resolve(self, req: Request, value, t_start: float) -> None:
+        now = self.clock()
+        if req.future._resolve(value):
+            with self._idle:
+                self.stats.completed += 1
+                self.stats.wait_s.observe(t_start - req.t_submit)
+                self.stats.service_s.observe(now - t_start)
+                self.stats.latency_s.observe(now - req.t_submit)
+                self._idle.notify_all()
+
+    def _finish_lane(self, names: Sequence[str], ex: _Execution,
+                     elapsed: float, dedicated: bool,
+                     count: bool = True) -> None:
+        now = self.clock()
+        with self._idle:
+            if count:
+                if dedicated:
+                    self.stats.dedicated += 1
+                else:
+                    self.stats.shared += 1
+            for name in names:
+                ld = self._loads[name]
+                # replace this execution's estimated span with reality;
+                # estimates for work still queued behind it stay in
+                ld.busy_until = max(ld.busy_until - ex.est_span, now)
+            self._idle.notify_all()
+
+
+def _scale_unit_cost(uc, k: int):
+    """Scale a per-unit CostTerms (or per-group dict of them) to a
+    whole-request cost — the unit of a coalesced batch execution."""
+    if uc is None:
+        return None
+    if isinstance(uc, dict):
+        return {g: _scale_unit_cost(t, k) for g, t in uc.items()}
+    from repro.core.cost_model import CostTerms
+    return CostTerms(flops=uc.flops * k, bytes=uc.bytes * k,
+                     steps=max(uc.steps, 1), compute=uc.compute,
+                     host_bytes=uc.host_bytes * k,
+                     interpret_steps=uc.interpret_steps)

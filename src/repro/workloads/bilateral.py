@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import CostTerms
 from repro.core.host_offload import HostTaskPool, bilateral_luts
 from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
 from repro.kernels.bilateral.ops import bilateral_filter, tuned_config
@@ -45,8 +46,13 @@ def run_hybrid(ex: HybridExecutor, size: int = 512, sigma_s: float = 3.0,
         out.block_until_ready()
         return out
 
+    # cost prior for ONE output row (matches kernels/bilateral/ops
+    # cost_terms per row: ~6 ops and two LUT gathers per tap) so a cold
+    # cache plans with zero probe runs (ROADMAP open item)
+    W = img.shape[1]
+    unit_cost = CostTerms(flops=6.0 * W * K * K, bytes=8.0 * W * K * K)
     ex.calibrate(lambda g, n: run_share(g, 0, n), probe_units=max(H // 8, 1),
-                 workload=f"Bilat/{size}x{radius}")
+                 workload=f"Bilat/{size}x{radius}", unit_cost=unit_cost)
     comm = (sp.size + rl.size) * 4 / 6e9      # LUT shipping
     out = ex.run_work_shared(
         "Bilat", H, run_share,

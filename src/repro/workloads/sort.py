@@ -9,10 +9,13 @@
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import CostTerms
 from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
 from repro.kernels.hist.ops import histogram
 from repro.kernels.sort_bitonic.ops import sort_rows
@@ -69,9 +72,16 @@ def run_hybrid(ex: HybridExecutor, n: int = 1 << 18, n_bins: int = 64
             out = np.sort(np.asarray(chunk))
         return out
 
+    # cost prior for ONE work unit (a bin of ~n/n_bins keys): a
+    # comparison sort's k*log2(k) compares, one read+write per pass —
+    # a cold cache plans from this with zero probe runs (ROADMAP open
+    # item: priors beyond conv/hist)
+    k_bin = max(n // n_bins, 2)
+    lg = math.log2(k_bin)
+    unit_cost = CostTerms(flops=2.0 * k_bin * lg, bytes=8.0 * k_bin * lg)
     ex.calibrate(lambda g, k: run_share(g, 0, k),
                  probe_units=max(n_bins // 8, 1),
-                 workload=f"sort/{n}x{n_bins}")
+                 workload=f"sort/{n}x{n_bins}", unit_cost=unit_cost)
     comm = 2 * n_bins * 4 / 6e9               # bin index ranges
     return ex.run_work_shared(
         "sort", n_bins, run_share,

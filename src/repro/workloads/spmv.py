@@ -7,9 +7,13 @@ devices (paper: "the entire x vector is kept at both the CPU and GPU").
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+from typing import Callable, Dict
+
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import CostTerms
 from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
 from repro.kernels.spmv import ops as spmv_ops
 from repro.kernels.spmv.ref import spmv_coo_ref
@@ -34,10 +38,38 @@ def make_matrix(n: int = 2048, density: float = 0.01, seed: int = 0,
 _PREP_CACHE = {}
 
 
-def run_hybrid(ex: HybridExecutor, n: int = 2048, density: float = 0.01
-               ) -> WorkSharedOutput:
-    A = make_matrix(n, density)
-    x = jnp.asarray(np.random.default_rng(1).standard_normal(n)
+@dataclass(frozen=True)
+class ShareSpec:
+    """The work-shared form of one spmv problem, reusable by both
+    ``run_hybrid`` and the serving request adapter."""
+    total_units: int
+    run_share: Callable[[str, int, int], object]
+    combine: Callable[[list], object]
+    unit_cost: Dict[str, CostTerms]
+    comm_cost: float
+    workload: str
+
+
+def _per_path_unit_cost(unit: int) -> Dict[str, CostTerms]:
+    """Per-path cost priors for ONE work unit (``unit`` nonzeros): the
+    groups run *different algorithms*, so a single CostTerms cannot
+    seed both.  ELL head (accel): vals+idx reads, x gather, padded-row
+    waste folded into a 1.5x byte factor (power-law heads pad the tile
+    width).  COO tail (host): rows+cols+vals reads, x gather, and the
+    segment-sum's y read-modify-write."""
+    return {
+        "accel": CostTerms(flops=2.0 * unit, bytes=4.0 * 3.0 * unit * 1.5),
+        "host": CostTerms(flops=2.0 * unit, bytes=4.0 * 5.0 * unit),
+    }
+
+
+def make_share_spec(n: int = 2048, density: float = 0.01, seed: int = 0
+                    ) -> ShareSpec:
+    """Build the suitability-split execution (paper §4.3): rows sorted
+    by nnz, dense prefix -> ELL on the accel group, sparse tail -> COO
+    on the host group; work units are nonzero blocks."""
+    A = make_matrix(n, density, seed)
+    x = jnp.asarray(np.random.default_rng(seed + 1).standard_normal(n)
                     .astype(np.float32))
     nnz = (A != 0).sum(1)
     # paper: sort rows by nnz; DENSE prefix -> accelerator (group 0),
@@ -63,7 +95,7 @@ def run_hybrid(ex: HybridExecutor, n: int = 2048, density: float = 0.01
 
     def run_share(group, start_u, k_u):
         lo, hi = rows_of(start_u, k_u)
-        key = (n, density, group, lo, hi)
+        key = (n, density, seed, group, lo, hi)
         if key not in _prep_cache:
             block = A_sorted[lo:hi]
             if group == "accel":
@@ -95,20 +127,32 @@ def run_hybrid(ex: HybridExecutor, n: int = 2048, density: float = 0.01
         y.block_until_ready()
         return (lo, hi, np.asarray(y))
 
-    ex.calibrate(lambda g, k: run_share(g, 0, k),
-                 probe_units=total_units // 8,
-                 workload=f"spmv/{n}x{density}")
-
     def combine(outs):
         y = np.zeros(n, np.float32)
         for lo, hi, part in outs:
             y[order[lo:hi]] = part              # undo row permutation
         return jnp.asarray(y)
 
-    comm = n * 4 / 6e9                          # y merge
+    return ShareSpec(total_units=total_units, run_share=run_share,
+                     combine=combine,
+                     unit_cost=_per_path_unit_cost(unit),
+                     comm_cost=n * 4 / 6e9,          # y merge
+                     workload=f"spmv/{n}x{density}")
+
+
+def run_hybrid(ex: HybridExecutor, n: int = 2048, density: float = 0.01
+               ) -> WorkSharedOutput:
+    spec = make_share_spec(n, density)
+    # per-path cost priors (ROADMAP open item): a cold cache plans the
+    # ELL head and COO tail from their own analytic terms with zero
+    # probe runs instead of falling back to probe-only estimates
+    ex.calibrate(lambda g, k: spec.run_share(g, 0, k),
+                 probe_units=spec.total_units // 8,
+                 workload=spec.workload, unit_cost=spec.unit_cost)
     # suitability split (dense head -> ELL, sparse tail -> COO): each
     # share runs as ONE chunk (no stealing) — ELL/COO shapes are
     # data-dependent per row range, so a uniform chunk grid would make
     # every chunk a fresh jit compile + packing inside the timed path
-    return ex.run_work_shared("spmv", total_units, run_share, combine,
-                              comm_cost=comm, whole_shares=True)
+    return ex.run_work_shared("spmv", spec.total_units, spec.run_share,
+                              spec.combine, comm_cost=spec.comm_cost,
+                              whole_shares=True)

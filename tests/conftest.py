@@ -1,6 +1,10 @@
 import os
 import sys
 import tempfile
+import threading
+import time
+
+import pytest
 
 # tests run against the source tree; 1 CPU device (no fake-device flags
 # here — only launch/dryrun.py uses the 512-device override)
@@ -22,3 +26,33 @@ os.environ["REPRO_TUNE_CACHE"] = os.path.join(
     tempfile.mkdtemp(prefix="repro-tune-test-"), "autotune.json")
 os.environ["REPRO_CALIB_CACHE"] = os.path.join(
     tempfile.mkdtemp(prefix="repro-calib-test-"), "calibration.json")
+
+
+@pytest.fixture(autouse=True)
+def _join_hybrid_threads():
+    """No pinned-device thread may outlive its test.
+
+    The serving scheduler owns persistent ``serve-*`` threads and the
+    async executor spawns per-call ``hybrid-*`` workers; a test that
+    fails (or forgets ``shutdown()``) under ``-x`` must not leak a
+    thread holding a ``jax.default_device`` context into the next
+    test, where it would warp timings and device placement.  Teardown
+    shuts down any scheduler the test left running, then waits for
+    every repro-owned thread to die — failing loudly if one survives
+    instead of letting the *next* test fail mysteriously."""
+    yield
+    try:
+        from repro.serve import scheduler as _sched
+        _sched.shutdown_all(timeout=10.0)
+    except ImportError:
+        pass
+    deadline = time.monotonic() + 10.0
+    leaked = []
+    for t in threading.enumerate():
+        if t is threading.current_thread() or not t.is_alive():
+            continue
+        if t.name.startswith(("serve-", "hybrid-")):
+            t.join(max(deadline - time.monotonic(), 0.1))
+            if t.is_alive():
+                leaked.append(t.name)
+    assert not leaked, f"threads leaked past test teardown: {leaked}"

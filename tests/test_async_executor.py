@@ -126,8 +126,18 @@ def test_steal_never_duplicates_or_drops_units():
 # ---------------------------------------------------------------------------
 # HybridExecutor steady state (calibration cache)
 # ---------------------------------------------------------------------------
-def test_steady_state_executes_each_chunk_exactly_once():
+@pytest.fixture()
+def clean_calibration():
+    """Teardown-safe cache isolation: the old in-test
+    ``clear_calibration_cache()`` tail call was skipped whenever the
+    test failed mid-body, leaking this test's unit times (and sticky
+    plans) into whatever ``-x`` ran next."""
     clear_calibration_cache()
+    yield
+    clear_calibration_cache()
+
+
+def test_steady_state_executes_each_chunk_exactly_once(clean_calibration):
     counts = {"calls": 0}
 
     def run_share(g, s, k):
@@ -157,11 +167,9 @@ def test_steady_state_executes_each_chunk_exactly_once():
     out2 = ex2.run_work_shared("t", 64, run_share, combine)
     assert counts["calls"] == out2.trace.n_chunks
     assert out2.value == list(range(64))
-    clear_calibration_cache()
 
 
-def test_cold_cache_probes_and_warms_once():
-    clear_calibration_cache()
+def test_cold_cache_probes_and_warms_once(clean_calibration):
     counts = {"calls": 0}
 
     def run_share(g, s, k):
@@ -173,7 +181,13 @@ def test_cold_cache_probes_and_warms_once():
                  workload="cold")
     # cold probe: warmup + 1 measured run per group
     assert counts["calls"] == 2 * len(ex.groups)
-    clear_calibration_cache()
+    assert ex.last_probe_runs == len(ex.groups)
+    # second calibrate: cache hit, zero probes (the serving scheduler's
+    # zero-cold-start contract reads this counter)
+    ex2 = HybridExecutor(simulated_ratio=4.0, n_chunks=4)
+    ex2.calibrate(lambda g, k: run_share(g, 0, k), probe_units=4,
+                  workload="cold")
+    assert ex2.last_probe_runs == 0
 
 
 # ---------------------------------------------------------------------------

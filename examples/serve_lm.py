@@ -6,7 +6,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.configs.base import ArchConfig, ParallelConfig

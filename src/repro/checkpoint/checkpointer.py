@@ -14,7 +14,6 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -55,7 +54,6 @@ class Checkpointer:
         """state: pytree dict (params, opt_state, data_index, ...)."""
         # snapshot to host memory synchronously (cheap), write async
         flat = [(k, np.asarray(v)) for k, v in _flatten(state)]
-        treedef = jax.tree_util.tree_structure(state)
 
         def write():
             tmp = os.path.join(self.dir, f".tmp_step_{step}")

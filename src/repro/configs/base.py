@@ -204,5 +204,6 @@ def shape_applicable(arch: ArchConfig, cell: ShapeCell) -> Tuple[bool, str]:
     if cell.kind == "decode" and not arch.supports_decode:
         return False, "encoder-only: no decode step"
     if cell.name == "long_500k" and not arch.supports_long_context:
-        return False, "pure full-attention arch: long_500k needs sub-quadratic attention"
+        return False, ("pure full-attention arch: long_500k needs "
+                       "sub-quadratic attention")
     return True, ""

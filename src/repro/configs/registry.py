@@ -1,9 +1,9 @@
 """Registry of assigned architectures (``--arch <id>``)."""
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import List
 
-from repro.configs.base import ArchConfig, SHAPES, ShapeCell, shape_applicable
+from repro.configs.base import ArchConfig, SHAPES, shape_applicable
 
 _MODULES = {
     "xlstm-350m": "xlstm_350m",

@@ -23,6 +23,7 @@ is a property of the process, calibration of the box.
 from __future__ import annotations
 
 import atexit
+import math
 import threading
 import time
 import warnings
@@ -155,6 +156,7 @@ class _CacheEntry:
     unit_time: float                 # EWMA seconds per work unit
     n_obs: int = 1
     in_process: bool = True          # measured in THIS process (vs disk)
+    t_obs: float = 0.0               # wall-clock time of last observation
 
 
 _CALIB_SECTION = "unit_times"
@@ -228,12 +230,18 @@ class CalibrationCache:
                 k = self.key(parts[0], parts[1], float(parts[2]))
                 t = float(e["t"])
                 n = int(e.get("n", 1))
+                # entries persisted before timestamps existed count as
+                # freshly observed: they will be replaced by the first
+                # in-process measurement anyway, and treating them as
+                # infinitely stale would discard real affinity data
+                ts = float(e.get("ts", time.time()))
             except (ValueError, KeyError, TypeError):
                 continue
             if k not in self._store:
                 self._store[k] = _CacheEntry(max(t, _MIN_UNIT_TIME),
                                              n_obs=max(n, 1),
-                                             in_process=False)
+                                             in_process=False,
+                                             t_obs=ts)
 
     def _flush_locked(self) -> None:
         if not self._disk.path or not self._dirty:
@@ -244,7 +252,8 @@ class CalibrationCache:
             dest = self._disk.data().setdefault(
                 _CALIB_SECTION, {}).setdefault(self._backend_name(), {})
             for k, e in self._store.items():
-                dest[self._json_key(k)] = {"t": e.unit_time, "n": e.n_obs}
+                dest[self._json_key(k)] = {"t": e.unit_time, "n": e.n_obs,
+                                           "ts": e.t_obs}
             self._disk.flush()
 
     def flush(self) -> None:
@@ -260,6 +269,52 @@ class CalibrationCache:
             self._load_disk()
             e = self._store.get(self.key(workload, group, slowdown))
             return e.unit_time if e else None
+
+    def get_decayed(self, workload: str, group: str,
+                    slowdown: float = 1.0,
+                    peers: Sequence[Tuple[str, float]] = (),
+                    tau_s: float = 0.0,
+                    now: Optional[float] = None) -> Optional[float]:
+        """Age-weighted estimate for *placement*: the raw entry shrunk
+        toward the cross-group mean as it goes stale.
+
+        A lane whose cached estimate says "slow" gets no traffic, so
+        the estimate never refreshes — with exploration disabled (or
+        between exploration windows) it would starve forever.  Here the
+        estimate's weight decays exponentially with its age
+        (``exp(-age / tau_s)``) and the lost weight shifts to the mean
+        of the OTHER lanes' estimates for this workload (``peers`` is
+        the other lanes as ``(group, slowdown)`` pairs): a fully stale
+        entry carries no information about this lane anymore, so the
+        best remaining guess is the workload's intrinsic cost as the
+        lanes still serving it measure it — the stale-slow lane drifts
+        back to parity, wins traffic again on its own, and the fresh
+        measurement then replaces the estimate entirely.  ``tau_s <=
+        0`` disables decay (returns the raw entry); no peers means
+        nothing to shrink toward (raw entry); a missing entry still
+        returns ``None`` so cost-model priors keep their role.  The
+        raw entry itself is never modified — executions that measure
+        the lane reset its age through ``put``."""
+        with self._lock:
+            self._load_disk()
+            e = self._store.get(self.key(workload, group, slowdown))
+            if e is None:
+                return None
+            if tau_s <= 0:
+                return e.unit_time
+            peer_vals = []
+            for pg, pslow in peers:
+                pe = self._store.get(self.key(workload, pg, pslow))
+                if pe is not None:
+                    peer_vals.append(pe.unit_time)
+            if not peer_vals:
+                return e.unit_time
+            if now is None:
+                now = time.time()
+            age = max(now - e.t_obs, 0.0)
+            w = math.exp(-age / max(tau_s, 1e-9))
+            target = sum(peer_vals) / len(peer_vals)
+            return w * e.unit_time + (1.0 - w) * target
 
     def warmed_in_process(self, workload: str, group: str,
                           slowdown: float = 1.0) -> bool:
@@ -281,12 +336,13 @@ class CalibrationCache:
         I/O."""
         unit_time = max(unit_time, _MIN_UNIT_TIME)
         k = self.key(workload, group, slowdown)
+        t_now = time.time()
         with self._lock:
             self._load_disk()
             e = self._store.get(k)
             fresh = e is None
             if fresh:
-                self._store[k] = _CacheEntry(unit_time)
+                self._store[k] = _CacheEntry(unit_time, t_obs=t_now)
             elif not e.in_process:
                 # first in-process measurement REPLACES a disk-loaded
                 # value instead of EWMA-blending into it: another
@@ -298,10 +354,12 @@ class CalibrationCache:
                 e.unit_time = unit_time
                 e.n_obs += 1
                 e.in_process = True
+                e.t_obs = t_now
             else:
                 e.unit_time = (self.alpha * unit_time
                                + (1 - self.alpha) * e.unit_time)
                 e.n_obs += 1
+                e.t_obs = t_now
             self._dirty = True
             if fresh or (time.monotonic() - self._last_flush
                          >= self.FLUSH_INTERVAL_S):

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 
 class EWMA:
@@ -58,6 +58,8 @@ class ServeStats:
     shed_deadline: int = 0           # expired or unmeetable deadlines
     batches: int = 0                 # coalesced executions (>=2 requests)
     batched_requests: int = 0        # requests that rode in a batch
+    merged_batches: int = 0          # batches stacked into ONE kernel
+    #                                  call (adapter merge/demux hooks)
     dedicated: int = 0               # executions placed on one group
     shared: int = 0                  # executions work-shared (paper split)
     probe_runs: int = 0              # calibration probe executions paid
@@ -80,6 +82,7 @@ class ServeStats:
             "shed_deadline": self.shed_deadline,
             "batches": self.batches,
             "batched_requests": self.batched_requests,
+            "merged_batches": self.merged_batches,
             "dedicated": self.dedicated, "shared": self.shared,
             "probe_runs": self.probe_runs,
             "in_flight": self.in_flight,

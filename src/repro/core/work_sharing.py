@@ -11,9 +11,8 @@ matrix rows (spmv), micro-batches (LM training — see train.trainer).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import List, Sequence
 
 import numpy as np
 

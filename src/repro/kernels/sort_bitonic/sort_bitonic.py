@@ -11,7 +11,6 @@ VMEM: (TR, L) f32 + index helpers; TR=256, L<=1024 -> ~1 MiB.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -16,8 +16,6 @@ MODEL_FLOPS follows the assignment: 6*N*D (dense) or 6*N_active*D (MoE).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict
 
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.models import blocks, model_zoo

@@ -35,7 +35,7 @@ from repro.configs import registry
 from repro.configs.base import SHAPES, ArchConfig, ShapeCell, shape_applicable
 from repro.launch import shardings as sh
 from repro.launch.mesh import make_production_mesh
-from repro.models import model_zoo, param as param_mod
+from repro.models import model_zoo
 from repro.optim.optimizer import OptConfig, init_opt_state
 from repro.parallel import sharding as shard_rules
 from repro.serve.serve_step import make_serve_step

@@ -26,8 +26,6 @@ import sys
 import time
 import traceback
 
-import jax
-import numpy as np
 
 from repro.configs import registry
 from repro.configs.base import SHAPES, shape_applicable

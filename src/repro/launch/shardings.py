@@ -9,8 +9,7 @@ from __future__ import annotations
 from typing import Any, Dict
 
 import jax
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ArchConfig
 from repro.models import blocks
@@ -40,7 +39,8 @@ def _layer_cache_axes(kind: str):
 
 def cache_axes(cfg: ArchConfig):
     """Axes tree matching model_zoo.init_caches / input_specs caches."""
-    pre = lambda t: ("layers",) + t
+    def pre(t):
+        return ("layers",) + t
     if cfg.is_encoder_decoder:
         return {"self": jax.tree.map(pre, AX_ATTN, is_leaf=is_axes),
                 "cross": jax.tree.map(pre, AX_ATTN, is_leaf=is_axes)}

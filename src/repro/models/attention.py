@@ -10,7 +10,6 @@ head axis shards evenly — parameters stay faithful to the architecture.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,7 @@ stacked group parameters, keeping HLO size independent of depth.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, List, Optional, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.ad_checkpoint

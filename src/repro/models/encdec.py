@@ -7,7 +7,6 @@ non-gated GELU, matching the whisper family.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.param import P, dense_init, embed_init, ones_init, zeros_init
+from repro.models.param import (dense_init, embed_init, ones_init,
+                                zeros_init)
 from repro.parallel.sharding import shard_act
 
 ACTS = {

@@ -5,7 +5,7 @@ xLSTM, hybrid, stub-frontend VLM/audio) and encoder-decoder models.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

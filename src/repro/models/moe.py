@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels.gmm.ops import gmm_model
 from repro.models.layers import ACTS, init_linear, linear
-from repro.models.param import P, dense_init
+from repro.models.param import dense_init
 from repro.parallel.sharding import shard_act
 
 

@@ -82,4 +82,4 @@ def embed_init(key, shape, axes, dtype=jnp.float32) -> P:
 
 def count_params(tree) -> int:
     leaves = jax.tree.leaves(values(tree))
-    return int(sum(int(np.prod(l.shape)) for l in leaves))
+    return int(sum(int(np.prod(x.shape)) for x in leaves))

@@ -116,7 +116,6 @@ def init_mamba_cache(cfg, batch: int, dtype=jnp.bfloat16):
 def mamba_decode(params, x, cfg, cache):
     """Single-token recurrent update. x: (B, 1, d_model)."""
     d_inner, d_state, d_conv, _ = _dims(cfg)
-    B_ = x.shape[0]
     xz = linear(params["in_proj"], x)
     u, z = jnp.split(xz, 2, axis=-1)                        # (B,1,di)
     window = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)

@@ -6,9 +6,7 @@ over params), so FSDP params give FSDP optimizer state for free.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -108,9 +106,11 @@ def apply_updates(cfg: OptConfig, params, grads, state, step):
             return p2.astype(p.dtype), m2.astype(m.dtype), v2
 
         out = jax.tree.map(upd, params, grads, state["m"], state["v"])
-        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        def istup(x):
+            return isinstance(x, tuple)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=istup)
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=istup)
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=istup)
         new_state = {"m": new_m, "v": new_v, "count": count}
     else:  # adafactor w/ momentum
         decay = 1.0 - cf ** -0.8
@@ -140,7 +140,8 @@ def apply_updates(cfg: OptConfig, params, grads, state, step):
 
         out = jax.tree.map(upd, params, grads, state["m"], state["vr"],
                            state["vc"])
-        isleaf = lambda x: isinstance(x, tuple)
+        def isleaf(x):
+            return isinstance(x, tuple)
         new_p = jax.tree.map(lambda t: t[0], out, is_leaf=isleaf)
         new_m = jax.tree.map(lambda t: t[1], out, is_leaf=isleaf)
         new_vr = jax.tree.map(lambda t: t[2], out, is_leaf=isleaf)

@@ -57,10 +57,32 @@ def _unit_time(g: GroupLoad, fallback: float) -> float:
     return g.unit_time if (g.unit_time and g.unit_time > 0) else fallback
 
 
+def _contended_finish(start: float, span: float, others_busy_until: float,
+                      contention: float) -> float:
+    """Projected finish of a dedicated span that overlaps other lanes'
+    busy windows on a host with limited cross-lane headroom.
+
+    While at least one other lane is projected busy (until
+    ``others_busy_until``) this lane only progresses at ``1/contention``
+    of its solo rate — the same measured pairwise headroom that prices
+    the shared candidate (``contention = 2/concurrency_capacity``).
+    Once the other lanes drain, the remaining work runs at full rate.
+    ``contention <= 1`` (real parallel headroom) is the old projection.
+    """
+    if contention <= 1.0 + 1e-12 or others_busy_until <= start + 1e-12:
+        return start + span
+    contended_window = others_busy_until - start
+    if span * contention <= contended_window:
+        return start + span * contention
+    done_contended = contended_window / contention    # units-of-span done
+    return others_busy_until + (span - done_contended)
+
+
 def plan_placement(n_units: int, groups: List[GroupLoad], now: float,
                    split_overhead_s: float = 0.0,
                    allow_shared: bool = True,
-                   shared_span_factor: float = 1.0
+                   shared_span_factor: float = 1.0,
+                   contention_factor: float = 1.0
                    ) -> Optional[PlacementDecision]:
     """Choose the placement with the earliest projected completion.
 
@@ -75,10 +97,16 @@ def plan_placement(n_units: int, groups: List[GroupLoad], now: float,
     cross-lane headroom (overlap_check's ``concurrency_capacity``):
     1.0 trusts the perfect-overlap model; on a low-core host where two
     pinned lanes deliver ~1x one lane's throughput, ``2/capacity`` ~2
-    makes the shared candidate honestly unattractive.  Groups with no
-    estimate fall back to the mean of the known estimates (or 1.0) —
-    probe-only planning then corrects them after the first execution.
-    Returns None when no group is alive."""
+    makes the shared candidate honestly unattractive.
+    ``contention_factor`` applies that same measured headroom to
+    *dedicated* candidates: a span co-scheduled while other lanes are
+    projected busy runs slowed by the factor until they drain — on a
+    no-headroom host two "parallel" dedicated lanes are contention,
+    and pretending otherwise under-projects every busy_until, admits
+    deadline-infeasible work and mis-ranks dedicated vs queued.
+    Groups with no estimate fall back to the mean of the known
+    estimates (or 1.0) — probe-only planning then corrects them after
+    the first execution.  Returns None when no group is alive."""
     alive = [g for g in groups if g.alive]
     if not alive:
         return None
@@ -91,10 +119,13 @@ def plan_placement(n_units: int, groups: List[GroupLoad], now: float,
     for g in alive:
         start = max(now, g.busy_until)
         span = n_units * _unit_time(g, fallback)
-        finish = start + span
+        others_busy = max([o.busy_until for o in alive if o is not g],
+                          default=now)
+        finish = _contended_finish(start, span, others_busy,
+                                   contention_factor)
         scores[f"dedicated:{g.name}"] = finish
         cand = PlacementDecision(
-            DEDICATED, [g.name], start, finish, span,
+            DEDICATED, [g.name], start, finish, finish - start,
             queued_behind_s=start - now)
         if best is None or cand.t_finish < best.t_finish:
             best = cand

@@ -37,7 +37,10 @@ Lifecycle: ``start()`` (implicit on first submit) → ``drain()`` (stop
 admitting, finish everything accepted, every future resolved exactly
 once) → ``shutdown()`` (drain + join all threads).  Env knobs:
 ``REPRO_SERVE_QUEUE`` (depth, default 256), ``REPRO_SERVE_WINDOW_MS``
-(batch window, default 2), ``REPRO_SERVE_MAX_BATCH`` (default 8).
+(batch window, default 2), ``REPRO_SERVE_MAX_BATCH`` (default 8),
+``REPRO_SERVE_SPAN_FACTOR`` (pins the otherwise self-probed
+cross-lane contention factor), ``REPRO_SERVE_STALE_TAU`` (staleness
+decay time constant for placement estimates, seconds; 0 disables).
 """
 from __future__ import annotations
 
@@ -47,7 +50,7 @@ import threading
 import time
 import weakref
 from contextlib import nullcontext
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.hybrid_executor import (DeviceGroup, HybridExecutor,
@@ -79,6 +82,90 @@ def _env_float(name: str, default: float) -> float:
         return float(os.environ.get(name, default))
     except ValueError:
         return default
+
+
+# measured span factors, memoized per device signature: every
+# scheduler in a process (and every test) shares one ~100 ms probe
+_SPAN_FACTOR_CACHE: Dict[tuple, float] = {}
+_SPAN_FACTOR_LOCK = threading.Lock()
+
+
+def measure_shared_span_factor(groups: Sequence[DeviceGroup]) -> float:
+    """Self-probed cross-lane contention pricing: ``2 / capacity``.
+
+    The shared-split candidate models perfect overlap; reality is the
+    host's measured pairwise headroom.  Two lanes pinned to the first
+    two groups' primary devices each run a small jitted op; each lane
+    is timed SOLO, then both concurrently: ``capacity = (t_a + t_b) /
+    t_both`` (2.0 = perfect overlap, ~1.0 = fully contended).  Summing
+    per-lane solo times keeps device-speed asymmetry out of the
+    number — on a heterogeneous box where one lane is simply slower,
+    ``t_both ~= t_slow`` under perfect overlap and the sum-based
+    capacity still reads ~2, where a ``2*t_fast/t_both`` formula would
+    misread the asymmetry as contention and suppress every split.
+    The factor ``max(1, 2/capacity)`` multiplies the shared
+    candidate's modeled makespan — exactly what ``overlap_check`` /
+    ``serving_bench`` measured externally before; now the Scheduler
+    pays the probe itself, once per process per device signature, so
+    callers cannot hand it a stale or wrong-host number.
+    ``REPRO_SERVE_SPAN_FACTOR`` pins the result (probe skipped)."""
+    pinned = _env_float("REPRO_SERVE_SPAN_FACTOR", 0.0)
+    if pinned > 0:
+        return pinned
+    if len(groups) < 2:
+        return 1.0
+    primaries = tuple(g.devices[0] if g.devices else None
+                      for g in list(groups)[:2])
+    key = tuple(str(d) for d in primaries)
+    with _SPAN_FACTOR_LOCK:
+        if key in _SPAN_FACTOR_CACHE:
+            return _SPAN_FACTOR_CACHE[key]
+
+        import jax
+        import jax.numpy as jnp
+
+        # per-lane inputs COMMITTED to the lane's device: an
+        # uncommitted operand re-transfers under every device context,
+        # and that transfer (not compute) dominates a small probe
+        x = jnp.ones((512, 512), jnp.float32)
+        xs = [x if d is None else jax.device_put(x, d) for d in primaries]
+        f = jax.jit(lambda v: (v @ v) * 0.5 + 0.1)
+
+        def lane(dev, arr, iters):
+            ctx = (jax.default_device(dev) if dev is not None
+                   else nullcontext())
+            with ctx:
+                for _ in range(iters):
+                    f(arr).block_until_ready()
+
+        for d, a in zip(primaries, xs):                # compile per device
+            lane(d, a, 1)
+        t0 = time.perf_counter()
+        lane(primaries[0], xs[0], 1)
+        t_call = max(time.perf_counter() - t0, 1e-6)
+        iters = max(int(0.03 / t_call), 3)             # ~30 ms per lane
+        t_solo = 0.0
+        for d, a in zip(primaries, xs):                # each lane alone
+            t0 = time.perf_counter()
+            lane(d, a, iters)
+            t_solo += time.perf_counter() - t0
+        threads = [threading.Thread(target=lane, args=(d, a, iters),
+                                    name="serve-span-probe")
+                   for d, a in zip(primaries, xs)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        t_both = max(time.perf_counter() - t0, 1e-9)
+        capacity = max(t_solo / t_both, 1e-3)
+        # clamp to the model's meaningful range: 1.0 = perfect
+        # overlap, 2.0 = a split's halves fully serialize.  Beyond 2
+        # the probe is measuring its own sync/thread overhead, and a
+        # runaway factor would poison every dedicated projection too.
+        factor = min(max(1.0, 2.0 / capacity), 2.0)
+        _SPAN_FACTOR_CACHE[key] = factor
+        return factor
 
 
 @dataclass
@@ -114,11 +201,12 @@ class Scheduler:
                  max_batch: Optional[int] = None,
                  n_chunks: int = 8,
                  split_overhead_s: float = 0.0,
-                 shared_span_factor: float = 1.0,
+                 shared_span_factor: Optional[float] = None,
                  policy: str = "cost",
                  fifo_group: Optional[str] = None,
                  failure_injector=None,
                  explore_every: int = 16,
+                 staleness_tau_s: Optional[float] = None,
                  clock: Callable[[], float] = time.monotonic):
         if executor is not None:
             self._ex = executor
@@ -132,10 +220,26 @@ class Scheduler:
         self.policy = policy
         self.fifo_group = fifo_group or self.groups[0].name
         self.split_overhead_s = split_overhead_s
-        # measured cross-lane headroom pricing for the shared
-        # candidate (see placement.plan_placement): 1.0 = perfect
-        # overlap; 2/concurrency_capacity on contended hosts
+        # measured cross-lane headroom pricing (2/concurrency_capacity
+        # on contended hosts, 1.0 = perfect overlap).  It prices BOTH
+        # the shared candidate's modeled makespan and the contention a
+        # dedicated span pays while other lanes are busy.  None (the
+        # default) self-probes it once at startup — trusting a
+        # caller-supplied number meant every caller had to re-measure
+        # overlap_check-style or silently inherit 1.0.
+        if shared_span_factor is None:
+            if policy == "cost" and len(self.groups) >= 2:
+                shared_span_factor = measure_shared_span_factor(
+                    self.groups)
+            else:
+                shared_span_factor = 1.0       # fifo never shares
         self.shared_span_factor = max(float(shared_span_factor), 1e-9)
+        # staleness decay for placement estimates (age-weighted
+        # shrinkage toward the cross-group mean, calibration.
+        # get_decayed): heals stale lanes without exploration traffic
+        if staleness_tau_s is None:
+            staleness_tau_s = _env_float("REPRO_SERVE_STALE_TAU", 300.0)
+        self.staleness_tau_s = max(float(staleness_tau_s), 0.0)
         if max_queue is None:
             max_queue = int(_env_float("REPRO_SERVE_QUEUE", 256))
         if batch_window_s is None:
@@ -357,7 +461,11 @@ class Scheduler:
             # them is exactly co-scheduling, allowed; single tiny
             # requests may still prefer a dedicated lane on their own
             allow_shared=(self.policy == "cost" and len(loads) >= 2),
-            shared_span_factor=self.shared_span_factor)
+            shared_span_factor=self.shared_span_factor,
+            # the same measured headroom prices dedicated spans that
+            # overlap other busy lanes (no-headroom hosts: two
+            # "parallel" dedicated lanes are contention, not overlap)
+            contention_factor=self.shared_span_factor)
         if decision is None:
             for r in batch:
                 if r.reject(Rejection("shutdown", r.workload,
@@ -436,11 +544,18 @@ class Scheduler:
 
     def _unit_time(self, spec, group_name: str) -> Optional[float]:
         """sec/unit estimate for placement: calibration cache first
-        (measured affinity, possibly from a previous process), then the
+        (measured affinity, possibly from a previous process — decayed
+        toward the cross-group mean as it goes stale, so a lane whose
+        old "slow" number starved it of traffic drifts back to parity
+        and re-measures itself without exploration), then the
         cost-model prior, else None (probe-only workloads fall back to
         symmetric placement until their first measured execution)."""
         g = next(g for g in self.groups if g.name == group_name)
-        cached = self._ex.cache.get(spec.workload, group_name, g.slowdown)
+        cached = self._ex.cache.get_decayed(
+            spec.workload, group_name, g.slowdown,
+            peers=[(o.name, o.slowdown) for o in self.groups
+                   if o.name != group_name],
+            tau_s=self.staleness_tau_s)
         if cached is not None:
             return cached
         uc = getattr(spec, "unit_cost", None)
@@ -522,12 +637,49 @@ class Scheduler:
                 kept.append(i)
         return kept
 
+    def _merge_batch(self, ex: _Execution, kept: List[int]):
+        """Array-level batching: when every kept member's adapter has a
+        ``merge`` hook, stack the payloads into ONE execution (returns
+        the ``MergedBatch``, or None -> request-granularity path).  A
+        merge that declines (mismatched shapes within a pow2 bucket)
+        or raises falls back — batching is an optimization, never a
+        correctness risk."""
+        if len(kept) < 2:
+            return None
+        specs = [ex.specs[i] for i in kept]
+        merge = getattr(specs[0], "merge", None)
+        if merge is None or any(getattr(s, "merge", None) is not merge
+                                for s in specs):
+            return None
+        try:
+            merged = merge(specs)
+        except Exception:                          # noqa: BLE001
+            return None
+        if merged is not None:
+            with self._lock:
+                self.stats.merged_batches += 1
+        return merged
+
     def _run_dedicated(self, ex: _Execution, g: DeviceGroup) -> None:
         kept = self._shed_expired(ex)
         t0 = self.clock()
         done_units = 0
+        # merged executions calibrate under the merged spec's workload
+        # key: its units (whole member requests) can differ from the
+        # base spec's units (e.g. sort segments)
+        cal_wl = ex.specs[0].workload
         try:
             with self._device_ctx(g):
+                merged = self._merge_batch(ex, kept)
+                if merged is not None:
+                    cal_wl = merged.spec.workload
+                    ts = self.clock()
+                    value = merged.spec.run_one()
+                    done_units += max(int(merged.spec.total_units), 1)
+                    for j, i in enumerate(kept):
+                        self._resolve(ex.requests[i],
+                                      merged.demux(value, j), ts)
+                    kept = []
                 for i in kept:
                     r, spec = ex.requests[i], ex.specs[i]
                     ts = self.clock()
@@ -542,7 +694,7 @@ class Scheduler:
                         self._idle.notify_all()
         elapsed = self.clock() - t0
         if done_units > 0 and elapsed > 0:
-            self._ex.cache.put(ex.specs[0].workload, g.name,
+            self._ex.cache.put(cal_wl, g.name,
                                elapsed * g.slowdown / done_units,
                                g.slowdown)
         self._finish_lane([g.name], ex, elapsed, dedicated=True)
@@ -590,7 +742,12 @@ class Scheduler:
         the work-share splits whole requests across the groups (each
         member runs entirely on one group: exact per-request demux, no
         cross-request state), amortizing planning, lane arbitration and
-        dispatch over the window."""
+        dispatch over the window.  Array-level merging is deliberately
+        NOT used here: a shared placement happens on idle lanes, where
+        running members concurrently across lanes beats fusing them
+        into one kernel on one lane — and per-member executions reuse
+        the members' own jit caches, while a stacked grid's chunk
+        slices would compile fresh shapes inside the serving path."""
         specs = [ex.specs[i] for i in kept]
         spec0 = specs[0]
         key = f"{spec0.workload}@batch"

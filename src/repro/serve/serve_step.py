@@ -5,7 +5,7 @@ token against a KV cache of ``seq_len`` — exactly as assigned.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,7 @@ compiled graph.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,6 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models import model_zoo
 from repro.optim.optimizer import OptConfig, apply_updates
-from repro.parallel.sharding import shard_act
 
 
 def cross_entropy(logits, labels, mask=None):

@@ -8,11 +8,33 @@ The |V1| split point is the work-share knob.
 """
 from __future__ import annotations
 
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import CostTerms
 from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
+
+
+def unit_cost_terms(n: int, avg_deg: float = 4.0) -> Dict[str, CostTerms]:
+    """Per-path priors for ONE vertex of a subgraph share: the groups
+    run *different algorithms* (paper §4.8), so a single CostTerms
+    cannot seed both.  Accel: min-label propagation, ~log2(n) rounds of
+    per-edge gathers + pointer jumps.  Host: python/numpy BFS — its
+    cost is interpreter overhead per adjacency visit, modeled as host
+    traffic so it rates at the measured host-callback bandwidth rather
+    than the streaming-flops peak no interpreter loop can reach."""
+    rounds = max(float(np.log2(max(n, 2))), 1.0)
+    return {
+        "accel": CostTerms(flops=4.0 * avg_deg * rounds,
+                           bytes=8.0 * (avg_deg + 2.0) * rounds),
+        "host": CostTerms(flops=2.0 * avg_deg,
+                          host_bytes=1500.0 * (1.0 + avg_deg)),
+    }
 
 
 def make_graph(n: int = 1 << 14, avg_deg: float = 4.0, seed: int = 0):
@@ -43,9 +65,6 @@ def bfs_components_np(n: int, edges: np.ndarray) -> np.ndarray:
                     label[y] = s
                     stack.append(y)
     return label
-
-
-import functools
 
 
 @functools.partial(jax.jit, static_argnums=0)
@@ -86,9 +105,22 @@ class _UF:
             self.p[ra] = rb
 
 
-def run_hybrid(ex: HybridExecutor, n: int = 1 << 13, avg_deg: float = 4.0
-               ) -> WorkSharedOutput:
-    n, edges = make_graph(n, avg_deg)
+@dataclass(frozen=True)
+class ShareSpec:
+    """The work-shared form of one concomp problem, reusable by both
+    ``run_hybrid`` and the serving request adapter (per-subgraph
+    shares: units are vertices of a contiguous vertex range)."""
+    total_units: int
+    run_share: Callable[[str, int, int], object]
+    combine: Callable[[list], object]
+    unit_cost: Dict[str, CostTerms]
+    comm_cost: float
+    workload: str
+
+
+def make_share_spec(n: int = 1 << 13, avg_deg: float = 4.0, seed: int = 0
+                    ) -> ShareSpec:
+    n, edges = make_graph(n, avg_deg, seed)
 
     def run_share(group, start, k):
         """Label the induced subgraph on vertices [start, start+k)."""
@@ -106,9 +138,6 @@ def run_hybrid(ex: HybridExecutor, n: int = 1 << 13, avg_deg: float = 4.0
                     k, jnp.asarray(sub))) + lo
         return lab
 
-    ex.calibrate(lambda g, k: run_share(g, 0, k), probe_units=n // 8,
-                 workload=f"CC/{n}")
-
     def combine(outs):
         """Merge via the contracted cross-edge graph: union-find runs
         over component *labels* only (cheap), not all vertices —
@@ -117,7 +146,8 @@ def run_hybrid(ex: HybridExecutor, n: int = 1 << 13, avg_deg: float = 4.0
         edge when its endpoints were labeled by different chunks."""
         label = np.concatenate(outs).astype(np.int64)
         cuts = np.cumsum([np.asarray(o).shape[0] for o in outs])[:-1]
-        piece = lambda v: np.searchsorted(cuts, v, side="right")
+        def piece(v):
+            return np.searchsorted(cuts, v, side="right")
         cross = edges[piece(edges[:, 0]) != piece(edges[:, 1])]
         uniq, inv = np.unique(label, return_inverse=True)
         uf = _UF(len(uniq))
@@ -128,9 +158,24 @@ def run_hybrid(ex: HybridExecutor, n: int = 1 << 13, avg_deg: float = 4.0
         root = np.asarray([uf.find(i) for i in range(len(uniq))])
         return uniq[root][inv]
 
-    comm = len(edges) * 8 / 6e9
+    return ShareSpec(total_units=n, run_share=run_share, combine=combine,
+                     unit_cost=unit_cost_terms(n, avg_deg),
+                     comm_cost=len(edges) * 8 / 6e9,
+                     workload=f"CC/{n}")
+
+
+def run_hybrid(ex: HybridExecutor, n: int = 1 << 13, avg_deg: float = 4.0
+               ) -> WorkSharedOutput:
+    spec = make_share_spec(n, avg_deg)
+    # per-path cost priors (ROADMAP open item): BFS and label-prop are
+    # different algorithms, so each group's share is seeded from its
+    # own analytic terms — a cold cache plans with zero probe runs
+    ex.calibrate(lambda g, k: spec.run_share(g, 0, k),
+                 probe_units=spec.total_units // 8,
+                 workload=spec.workload, unit_cost=spec.unit_cost)
     # each chunk's induced subgraph has a data-dependent edge count —
     # every chunk boundary is a fresh jit shape on either path
     # (label-prop vs BFS), so the shares run as single whole chunks
-    return ex.run_work_shared("CC", n, run_share, combine, comm_cost=comm,
+    return ex.run_work_shared("CC", spec.total_units, spec.run_share,
+                              spec.combine, comm_cost=spec.comm_cost,
                               whole_shares=True)

@@ -15,9 +15,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import CostTerms
 from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
 from repro.core.metrics import HybridResult
 from repro.core.task_graph import TaskGraph
+
+
+def unit_cost_terms(h: int, w: int) -> CostTerms:
+    """Prior for one FULL Floyd-Steinberg dither of an (h, w) image:
+    ~10 ops per pixel (quantize + 4 error pushes), but executed as a
+    sequential row scan — ``steps=h`` charges the per-row dependency
+    chain so the model doesn't rank this like a data-parallel kernel.
+    The request is one indivisible unit (the trapezoidal hybrid split
+    lives inside ``run_hybrid``, not across serving lanes)."""
+    px = float(h) * float(w)
+    return CostTerms(flops=10.0 * px, bytes=8.0 * px, steps=max(h, 1))
 
 
 def make_image(h: int = 256, w: int = 256, seed: int = 0):

@@ -14,7 +14,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import CostTerms
 from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
+
+
+def unit_cost_terms(d: int, n_steps: int = 4) -> CostTerms:
+    """Prior for one FULL request of ``n_steps`` BGK steps on a d^3
+    lattice: per cell per step, 19 distributions pay moments (~2 ops),
+    equilibrium (~8 ops) and relax+stream (~3 ops + the roll's
+    read/write); steps are sequential so the request is one unit."""
+    cells = float(d) ** 3
+    return CostTerms(flops=19.0 * 13.0 * cells * n_steps,
+                     bytes=19.0 * 4.0 * 3.0 * cells * n_steps,
+                     steps=n_steps)
 
 # D3Q19 velocities and weights
 C = np.array(
@@ -62,6 +74,16 @@ def stream(f):
         out.append(jnp.roll(f[q], shift=(int(C[q, 0]), int(C[q, 1]),
                                          int(C[q, 2])), axis=(0, 1, 2)))
     return jnp.stack(out)
+
+
+@jax.jit
+def step_all(f):
+    """One single-device BGK step over all 19 planes (the serving
+    adapter's dedicated path; algebraically ``lbm_step`` with every
+    plane in one group)."""
+    rho, u = moments(f)
+    feq = equilibrium(rho, u)
+    return stream(f + OMEGA * (feq - f))
 
 
 def lbm_step(f, qs_host, qs_accel):
@@ -116,7 +138,6 @@ def run_hybrid(ex: HybridExecutor, d: int = 32, n_steps: int = 4
     from repro.core.hybrid_executor import WorkSharedOutput as _WSO
 
     f = init_state(d)
-    slow = {g.name: g.slowdown for g in ex.groups}
     # plane shares from throughput ratio (paper: 15 GPU / 4 CPU)
     thr = [1.0 / g.slowdown for g in ex.groups]
     from repro.core import work_sharing

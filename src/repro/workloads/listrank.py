@@ -21,10 +21,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import CostTerms
 from repro.core.host_offload import host_prng_stream
 from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
 from repro.core.metrics import HybridResult
 from repro.core.task_graph import TaskGraph
+
+
+def unit_cost_terms(n: int) -> CostTerms:
+    """Prior for one FULL ranking request over ``n`` nodes: Wyllie
+    pointer jumping runs ~log2(n) rounds, each two irregular gathers
+    (succ[succ], rank[succ]) and an add over every node.  The rounds
+    are sequential — the request is one indivisible unit for serving
+    placement (the hybrid win inside it is the Fig. 5 PRNG pipeline,
+    not a work split)."""
+    rounds = max(float(np.ceil(np.log2(max(n, 2)))), 1.0)
+    return CostTerms(flops=2.0 * n * rounds,
+                     bytes=8.0 * 4.0 * n * rounds,
+                     steps=int(rounds))
 
 
 def make_list(n: int, seed: int = 0):

@@ -11,11 +11,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import CostTerms
 from repro.core.host_offload import HostTaskPool, host_prng_stream
 from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
 
 N_STEPS = 32
 MU_A, MU_S = 0.1, 0.9                 # absorption / scattering
+
+
+def unit_cost_terms(unit: int) -> CostTerms:
+    """Prior for ONE work unit of ``unit`` photons: per interaction
+    step each photon pays ~6 elementwise ops (weight decay, roulette,
+    select) and reads its 4-byte uniform."""
+    return CostTerms(flops=6.0 * unit * N_STEPS,
+                     bytes=4.0 * unit * N_STEPS)
 
 
 def simulate_photons(u: jnp.ndarray) -> jnp.ndarray:
@@ -53,7 +62,8 @@ def run_hybrid(ex: HybridExecutor, n_photons: int = 1 << 18,
         return np.asarray(out) * (k * unit)
 
     ex.calibrate(lambda g, k: run_share(g, 0, k), probe_units=units // 8,
-                 workload=f"MC/{n_photons}x{unit}")
+                 workload=f"MC/{n_photons}x{unit}",
+                 unit_cost=unit_cost_terms(unit))
     out = ex.run_work_shared(
         "MC", units, run_share,
         combine=lambda outs: float(sum(outs)) / n_photons,

@@ -14,8 +14,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import CostTerms
 from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
 from repro.core.metrics import HybridResult
+
+N_MARCH_STEPS = 96
+
+
+def entry_cost_terms() -> CostTerms:
+    """Per-ray prior for phase 1 (slab bbox intersection): ~6 mul/add
+    per axis plus the min/max reduction; reads o/d, writes t_entry."""
+    return CostTerms(flops=24.0, bytes=28.0)
+
+
+def march_cost_terms(n_steps: int = N_MARCH_STEPS) -> CostTerms:
+    """Per-ray prior for phase 2: per step, 8 trilinear corner samples
+    (gather + 3-factor weight products) and the position update —
+    ~60 flops and 8 volume reads."""
+    return CostTerms(flops=60.0 * n_steps, bytes=4.0 * 9.0 * n_steps)
+
+
+def unit_cost_terms(n_steps: int = N_MARCH_STEPS) -> CostTerms:
+    """Per-ray prior for a full entry+march request (the serving
+    adapter's unit)."""
+    e, m = entry_cost_terms(), march_cost_terms(n_steps)
+    return CostTerms(flops=e.flops + m.flops, bytes=e.bytes + m.bytes)
 
 
 def make_volume(d: int = 64, seed: int = 0):
@@ -84,7 +107,8 @@ def run_hybrid(ex: HybridExecutor, n_rays: int = 1 << 16, d: int = 64
         return np.asarray(t)
 
     ex.calibrate(lambda g, k: p1(g, 0, k), probe_units=n_rays // 8,
-                 workload=f"RC/entry/{n_rays}x{d}")
+                 workload=f"RC/entry/{n_rays}x{d}",
+                 unit_cost=entry_cost_terms())
     o1 = ex.run_work_shared("RC/entry", n_rays, p1,
                             combine=lambda o: np.concatenate(o))
     t_in = jnp.asarray(o1.value)
@@ -97,7 +121,8 @@ def run_hybrid(ex: HybridExecutor, n_rays: int = 1 << 16, d: int = 64
         return np.asarray(c)
 
     ex.calibrate(lambda g, k: p2(g, 0, k), probe_units=n_rays // 16,
-                 workload=f"RC/march/{n_rays}x{d}")
+                 workload=f"RC/march/{n_rays}x{d}",
+                 unit_cost=march_cost_terms())
     o2 = ex.run_work_shared("RC", n_rays, p2,
                             combine=lambda o: np.concatenate(o))
     # combined metrics over both phases

@@ -14,7 +14,17 @@ adapter turns a payload into a ``RequestSpec``:
   PR-3 cost model before any probe has run (per-group dicts for
   suitability-split workloads whose groups run different algorithms),
 * ``bucket`` — the shape bucket batching coalesces on: two requests
-  merge only when a single batched execution can serve both.
+  merge only when a single batched execution can serve both,
+* ``merge`` (optional) — array-level batching: stack same-shape
+  payloads into ONE kernel call (a ``MergedBatch`` whose ``demux``
+  recovers each member's exact result).  Without it the scheduler
+  falls back to request-granularity coalescing (members run whole,
+  one per work unit).
+
+Every entry of ``repro.workloads.ALL_WORKLOADS`` — the paper's 13
+Table-1 workloads — is registered here (plus ``attention`` and the
+per-arch serve-LM adapters), each with a ``unit_cost`` prior, so a
+fresh process can place ANY Table-1 request with zero probe runs.
 
 Payloads are dicts of shape parameters (sizes, seeds) or raw arrays;
 deterministic default inputs reuse each workload module's memoized
@@ -41,7 +51,14 @@ class RequestSpec:
     """Everything the scheduler needs to place and execute one request.
     ``workload`` keys the calibration cache (and therefore placement's
     learned per-group affinity); it must identify the computation AND
-    the shape bucket."""
+    the shape bucket.
+
+    ``arrays`` holds the raw device/host input arrays when the adapter
+    supports array-level batching; ``merge`` builds a ``MergedBatch``
+    from a list of same-bucket specs (returning ``None`` when this
+    particular batch cannot stack, e.g. mismatched shapes inside one
+    pow2 bucket — the scheduler then falls back to per-request
+    coalescing)."""
     workload: str
     total_units: int
     run_one: Callable[[], object]
@@ -52,6 +69,21 @@ class RequestSpec:
     whole_shares: bool = False
     steal: Optional[bool] = None
     bucket: str = ""
+    arrays: tuple = ()
+    merge: Optional[Callable[[List["RequestSpec"]],
+                             Optional["MergedBatch"]]] = None
+
+
+@dataclass(frozen=True)
+class MergedBatch:
+    """One array-level batched execution serving several requests:
+    ``spec`` runs the stacked inputs as one kernel call (dedicated
+    path) or one work-shared grid (shared path); ``demux(value, i)``
+    slices member ``i``'s exact result back out — batched execution
+    must be bit-identical to per-request execution, so demux is pure
+    indexing, never recomputation."""
+    spec: RequestSpec
+    demux: Callable[[object, int], object]
 
 
 _REGISTRY: Dict[str, Callable[[Optional[dict]], RequestSpec]] = {}
@@ -217,6 +249,36 @@ def _sort_inputs(n: int, seed: int) -> np.ndarray:
     return np.random.default_rng(seed).random(n).astype(np.float32)
 
 
+def _sort_merge(specs: List[RequestSpec]) -> Optional[MergedBatch]:
+    """Stack equal-length sort payloads into a (R, n) matrix sorted
+    row-wise in ONE numpy call; demux returns row i.  Row-wise
+    ``np.sort`` of the stack is bit-identical to sorting each payload
+    alone (same algorithm over the same values)."""
+    xs = [s.arrays[0] for s in specs if s.arrays]
+    if len(xs) != len(specs) or len({x.shape for x in xs}) != 1:
+        return None                     # pow2 bucket, unequal lengths
+    stack = np.stack(xs)
+    n = stack.shape[1]
+
+    def run_one():
+        return np.sort(stack, axis=-1, kind="stable")
+
+    def run_share(group, start, k):
+        return np.sort(stack[start:start + k], axis=-1, kind="stable")
+
+    base = specs[0]
+    lg = max(np.log2(max(n, 2)), 1.0)
+    spec = RequestSpec(
+        # row units are whole member sorts — a different per-unit cost
+        # than the base spec's segments, so a distinct calibration key
+        workload=f"{base.workload}@stack", total_units=len(xs),
+        run_one=run_one, run_share=run_share,
+        combine=lambda outs: np.concatenate(outs, axis=0),
+        unit_cost=CostTerms(flops=2.0 * n * lg, bytes=8.0 * n * lg),
+        bucket=base.bucket)
+    return MergedBatch(spec, lambda value, i: value[i])
+
+
 def _sort_spec(payload: Optional[dict]) -> RequestSpec:
     p = dict(payload or {})
     if "data" in p:
@@ -245,7 +307,8 @@ def _sort_spec(payload: Optional[dict]) -> RequestSpec:
         run_one=run_one, run_share=run_share, combine=combine,
         unit_cost=CostTerms(flops=2.0 * seg * lg, bytes=8.0 * seg * lg),
         comm_cost=0.0,
-        bucket=f"N{pow2_bucket(n)}")
+        bucket=f"N{pow2_bucket(n)}",
+        arrays=(x,), merge=_sort_merge)
 
 
 # ---------------------------------------------------------------------------
@@ -264,6 +327,69 @@ def _attn_inputs(B: int, T: int, H: int, d: int, Kv: int, seed: int):
     v = jax.random.normal(jax.random.key(seed + 2), (B, T, Kv, d),
                           jnp.float32)
     return q, k, v
+
+
+def _ceil_pow2(n: int) -> int:
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def _pad_pow2_rows(x, rows: int):
+    """Zero-pad the leading axis to ``rows`` (a pow2): merged batches
+    of 3, 5, 6... members would each jit-compile a fresh kernel shape
+    inside the serving path; padding bounds the shape set to the
+    pow2 sizes, which amortize after the first batch."""
+    b = int(x.shape[0])
+    if b == rows:
+        return x
+    return jnp.pad(x, [(0, rows - b)] + [(0, 0)] * (x.ndim - 1))
+
+
+def _attn_merge(specs: List[RequestSpec]) -> Optional[MergedBatch]:
+    """Concatenate same-shape attention requests along the batch axis
+    into ONE sdpa call; demux slices each member's rows back out.
+    Every (batch-row, head) is an independent program of the blocked
+    kernel, so the stacked call is bit-identical per row (zero-pad
+    rows compute garbage nobody reads)."""
+    arrs = [s.arrays for s in specs if len(s.arrays) == 3]
+    if (len(arrs) != len(specs)
+            or len({a[0].shape[1:] for a in arrs}) != 1
+            or len({a[1].shape[1:] for a in arrs}) != 1):
+        return None                     # pow2 bucket, unequal shapes
+    from repro.kernels.flash_attention import ops as attn_ops
+
+    offs = np.cumsum([0] + [int(a[0].shape[0]) for a in arrs])
+    rows = _ceil_pow2(int(offs[-1]))
+    q = _pad_pow2_rows(jnp.concatenate([a[0] for a in arrs], axis=0),
+                       rows)
+    k = _pad_pow2_rows(jnp.concatenate([a[1] for a in arrs], axis=0),
+                       rows)
+    v = _pad_pow2_rows(jnp.concatenate([a[2] for a in arrs], axis=0),
+                       rows)
+
+    def run_one():
+        out = attn_ops.sdpa(q, k, v, causal=True)
+        out.block_until_ready()
+        return out
+
+    def run_share(group, start, n):
+        out = attn_ops.sdpa(q[start:start + n], k[start:start + n],
+                            v[start:start + n], causal=True)
+        out.block_until_ready()
+        return out
+
+    base = specs[0]
+    spec = RequestSpec(
+        # distinct calibration key: run_one computes PADDED rows while
+        # total_units counts real ones, so elapsed/real-rows would
+        # overestimate the base workload's per-row time by up to 2x
+        # and bias placement against whichever lane ran the merge
+        workload=f"{base.workload}@stack", total_units=int(offs[-1]),
+        run_one=run_one, run_share=run_share,
+        combine=lambda outs: jnp.concatenate(outs, axis=0),
+        unit_cost=base.unit_cost, comm_cost=base.comm_cost,
+        bucket=base.bucket)
+    return MergedBatch(spec,
+                       lambda value, i: value[offs[i]:offs[i + 1]])
 
 
 def _attention_spec(payload: Optional[dict]) -> RequestSpec:
@@ -303,7 +429,417 @@ def _attention_spec(payload: Optional[dict]) -> RequestSpec:
         combine=lambda outs: jnp.concatenate(outs, axis=0),
         unit_cost=unit,
         comm_cost=T * H * d * 4 / 6e9,
-        bucket=f"T{pow2_bucket(T)}_H{H}_d{d}")
+        bucket=f"T{pow2_bucket(T)}_H{H}_d{d}",
+        arrays=(q, k, v), merge=_attn_merge)
+
+
+# ---------------------------------------------------------------------------
+# spgemm — row-row product (paper §4.4); units are output rows.  The
+# padded-ELL pack of A is input prep, memoized once per problem, so
+# every request (and every row share) is a pure gather+einsum call —
+# run_share slices the SAME packed arrays run_one uses, so shares are
+# bit-identical to the dedicated path, uniform in shape, stealable.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=4)
+def _spgemm_prepared(n: int, density: float, seed: int):
+    from repro.workloads import spgemm as spgemm_wl
+
+    A, B_np = spgemm_wl.make_matrices(n, density, seed)
+    width = max(int((A != 0).sum(1).max()), 1)
+    vals = np.zeros((n, width), np.float32)
+    idx = np.zeros((n, width), np.int32)
+    for i in range(n):
+        c = np.nonzero(A[i])[0]
+        vals[i, :len(c)] = A[i, c]
+        idx[i, :len(c)] = c
+    return jnp.asarray(vals), jnp.asarray(idx), jnp.asarray(B_np)
+
+
+def _spgemm_spec(payload: Optional[dict]) -> RequestSpec:
+    from repro.workloads import spgemm as spgemm_wl
+
+    p = dict(payload or {})
+    n = int(p.get("n", 512))
+    density = float(p.get("density", 0.02))
+    seed = int(p.get("seed", 0))
+    vals, idx, B = _spgemm_prepared(n, density, seed)
+
+    def rowrow(lo, hi):
+        out = jnp.einsum("rk,rkc->rc", vals[lo:hi], B[idx[lo:hi]])
+        out.block_until_ready()
+        return out
+
+    return RequestSpec(
+        workload=f"serve-spgemm/{n}x{density:g}", total_units=n,
+        run_one=lambda: rowrow(0, n),
+        run_share=lambda group, start, k: rowrow(start, start + k),
+        combine=lambda outs: jnp.concatenate(outs, axis=0),
+        unit_cost=spgemm_wl.unit_cost_terms(n, density),
+        comm_cost=n * n * density * 8 / 6e9,
+        bucket=f"N{pow2_bucket(n)}_d{density:g}")
+
+
+# ---------------------------------------------------------------------------
+# raycast — two-phase volume render (paper §4.5); units are ray blocks.
+# Per-ray independence lets one request's phases fuse per share AND
+# lets same-volume requests stack (array-level batching).
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=4)
+def _raycast_inputs(n_rays: int, d: int, seed: int):
+    from repro.workloads import raycast as rc
+
+    vol = rc.make_volume(d, seed)
+    ro, rd = rc.make_rays(n_rays, seed + 1)
+    return vol, ro, rd
+
+
+def _raycast_run(vol, ro, rd):
+    from repro.workloads import raycast as rc
+
+    t_in = rc._entry(ro, rd)
+    out = rc._march(vol, ro, rd, t_in)
+    out.block_until_ready()
+    return out
+
+
+def _raycast_merge(specs: List[RequestSpec]) -> Optional[MergedBatch]:
+    """Concatenate same-volume, same-count ray sets into ONE
+    entry+march call; demux slices each member's rays back out (every
+    ray is independent, so the stacked call is bit-identical)."""
+    arrs = [s.arrays for s in specs if len(s.arrays) == 3]
+    if len(arrs) != len(specs):
+        return None
+    vol = arrs[0][0]
+    if (any(a[0] is not vol for a in arrs)      # memoized volume: identity
+            or len({a[1].shape for a in arrs}) != 1):
+        return None
+    n_each = int(arrs[0][1].shape[0])
+    n_real = len(arrs) * n_each
+    rows = _ceil_pow2(n_real)               # bound jit shape variants
+    ro = _pad_pow2_rows(jnp.concatenate([a[1] for a in arrs], axis=0),
+                        rows)
+    rd = _pad_pow2_rows(jnp.concatenate([a[2] for a in arrs], axis=0),
+                        rows)
+    base = specs[0]
+    unit = max(n_each // max(int(base.total_units), 1), 1)
+    total = len(arrs) * int(base.total_units)
+
+    def run_share(group, start, k):
+        lo = start * unit
+        hi = n_real if start + k >= total else (start + k) * unit
+        return _raycast_run(vol, ro[lo:hi], rd[lo:hi])
+
+    spec = RequestSpec(
+        # distinct calibration key: run_one computes the pow2-padded
+        # ray count, so timing it against the real unit count would
+        # inflate the base workload's per-unit estimate
+        workload=f"{base.workload}@stack", total_units=total,
+        run_one=lambda: _raycast_run(vol, ro, rd),
+        run_share=run_share,
+        combine=lambda outs: jnp.concatenate(outs, axis=0),
+        unit_cost=base.unit_cost, comm_cost=base.comm_cost,
+        bucket=base.bucket)
+    return MergedBatch(
+        spec, lambda value, i: value[i * n_each:(i + 1) * n_each])
+
+
+def _raycast_spec(payload: Optional[dict]) -> RequestSpec:
+    from repro.workloads import raycast as rc
+
+    p = dict(payload or {})
+    n_rays = int(p.get("n_rays", 1 << 14))
+    d = int(p.get("d", 32))
+    seed = int(p.get("seed", 0))
+    vol, ro, rd = _raycast_inputs(n_rays, d, seed)
+    unit = max(n_rays // 64, 1)
+    units = max(n_rays // unit, 1)
+
+    def run_share(group, start, k):
+        lo = start * unit
+        hi = n_rays if start + k >= units else (start + k) * unit
+        return _raycast_run(vol, ro[lo:hi], rd[lo:hi])
+
+    per_ray = rc.unit_cost_terms()
+    return RequestSpec(
+        workload=f"serve-raycast/{n_rays}x{d}", total_units=units,
+        run_one=lambda: _raycast_run(vol, ro, rd),
+        run_share=run_share,
+        combine=lambda outs: jnp.concatenate(outs, axis=0),
+        unit_cost=CostTerms(flops=per_ray.flops * unit,
+                            bytes=per_ray.bytes * unit),
+        comm_cost=n_rays * 4 / 6e9,
+        bucket=f"R{pow2_bucket(n_rays)}_D{d}",
+        arrays=(vol, ro, rd), merge=_raycast_merge)
+
+
+# ---------------------------------------------------------------------------
+# montecarlo — photon-migration estimator (paper §4.7); units are
+# photon blocks, the request's value is the mean absorbed weight.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=4)
+def _mc_inputs(n_photons: int, seed: int):
+    from repro.core.host_offload import host_prng_stream
+    from repro.workloads import montecarlo as mc
+
+    u = np.asarray(host_prng_stream(seed, n_photons * mc.N_STEPS))
+    return jnp.asarray(u).reshape(n_photons, mc.N_STEPS)
+
+
+def _montecarlo_spec(payload: Optional[dict]) -> RequestSpec:
+    from repro.workloads import montecarlo as mc
+
+    p = dict(payload or {})
+    n_photons = int(p.get("n_photons", 1 << 16))
+    unit = max(min(int(p.get("unit", 1 << 12)), n_photons), 1)
+    seed = int(p.get("seed", 42))
+    units = max(n_photons // unit, 1)
+    u_all = _mc_inputs(n_photons, seed)
+
+    def run_one():
+        out = mc.simulate_photons(u_all)
+        out.block_until_ready()
+        return float(np.asarray(out))
+
+    def run_share(group, start, k):
+        lo = start * unit
+        hi = n_photons if start + k >= units else (start + k) * unit
+        out = mc.simulate_photons(u_all[lo:hi])
+        out.block_until_ready()
+        return float(np.asarray(out)) * (hi - lo)
+
+    return RequestSpec(
+        workload=f"serve-mc/{n_photons}x{unit}", total_units=units,
+        run_one=run_one, run_share=run_share,
+        combine=lambda outs: float(sum(outs)) / n_photons,
+        unit_cost=mc.unit_cost_terms(unit),
+        comm_cost=n_photons * mc.N_STEPS * 4 / 6e9,
+        bucket=f"P{pow2_bucket(n_photons)}_u{unit}")
+
+
+# ---------------------------------------------------------------------------
+# listrank — Wyllie pointer jumping (paper §4.8).  The rounds are
+# sequential, so a request is ONE indivisible unit: placement
+# co-schedules whole rankings across lanes (the hybrid win inside one
+# ranking is the Fig. 5 PRNG pipeline, exercised by run_hybrid).
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=4)
+def _listrank_inputs(n: int, seed: int):
+    from repro.workloads import listrank as lr
+
+    succ, _head = lr.make_list(n, seed)
+    return succ
+
+
+def _listrank_spec(payload: Optional[dict]) -> RequestSpec:
+    from repro.workloads import listrank as lr
+
+    p = dict(payload or {})
+    n = int(p.get("n", 1 << 14))
+    seed = int(p.get("seed", 0))
+    succ = _listrank_inputs(n, seed)
+
+    def run_one():
+        out = lr.pointer_jump_rank(succ)
+        out.block_until_ready()
+        return np.asarray(out)
+
+    return RequestSpec(
+        workload=f"serve-listrank/{n}", total_units=1,
+        run_one=run_one,
+        run_share=lambda group, start, k: run_one(),
+        combine=lambda outs: outs[0],
+        unit_cost=lr.unit_cost_terms(n),
+        bucket=f"N{pow2_bucket(n)}")
+
+
+# ---------------------------------------------------------------------------
+# concomp — the per-subgraph suitability split (paper §4.8): host BFS
+# vs accel label-prop run DIFFERENT algorithms, so the prior is a
+# per-group dict; subgraph shapes are data-dependent -> whole shares.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=4)
+def _concomp_share_spec(n: int, avg_deg: float, seed: int):
+    from repro.workloads import concomp as cc
+
+    return cc.make_share_spec(n, avg_deg, seed)
+
+
+def _concomp_spec(payload: Optional[dict]) -> RequestSpec:
+    p = dict(payload or {})
+    n = int(p.get("n", 1 << 12))
+    avg_deg = float(p.get("avg_deg", 4.0))
+    seed = int(p.get("seed", 0))
+    shared = _concomp_share_spec(n, avg_deg, seed)
+
+    return RequestSpec(
+        workload=f"serve-concomp/{n}x{avg_deg:g}",
+        total_units=shared.total_units,
+        # dedicated path: the accel algorithm labels the whole graph
+        run_one=lambda: shared.run_share("accel", 0, shared.total_units),
+        run_share=shared.run_share, combine=shared.combine,
+        unit_cost=shared.unit_cost, comm_cost=shared.comm_cost,
+        whole_shares=True, steal=False,
+        bucket=f"N{pow2_bucket(n)}_g{avg_deg:g}")
+
+
+# ---------------------------------------------------------------------------
+# lbm — D3Q19 lattice Boltzmann (paper §4.9).  Steps are sequential
+# (each streams the previous state), so a request is one unit; the
+# plane-split task parallelism lives inside run_hybrid.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=4)
+def _lbm_state(d: int, seed: int):
+    from repro.workloads import lbm
+
+    return lbm.init_state(d, seed)
+
+
+def _lbm_spec(payload: Optional[dict]) -> RequestSpec:
+    from repro.workloads import lbm
+
+    p = dict(payload or {})
+    d = int(p.get("d", 16))
+    n_steps = max(int(p.get("n_steps", 2)), 1)
+    seed = int(p.get("seed", 0))
+    f0 = _lbm_state(d, seed)
+
+    def run_one():
+        cur = f0
+        for _ in range(n_steps):
+            cur = lbm.step_all(cur)
+        cur.block_until_ready()
+        return cur
+
+    return RequestSpec(
+        workload=f"serve-lbm/{d}x{n_steps}", total_units=1,
+        run_one=run_one,
+        run_share=lambda group, start, k: run_one(),
+        combine=lambda outs: outs[0],
+        unit_cost=lbm.unit_cost_terms(d, n_steps),
+        bucket=f"D{d}_s{n_steps}")
+
+
+# ---------------------------------------------------------------------------
+# dither — Floyd-Steinberg error diffusion (paper §4.10): inherently
+# sequential (the paper's point), one indivisible unit per request.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=4)
+def _dither_inputs(h: int, w: int, seed: int):
+    from repro.workloads import dither
+
+    return dither.make_image(h, w, seed)
+
+
+def _dither_spec(payload: Optional[dict]) -> RequestSpec:
+    from repro.workloads import dither
+
+    p = dict(payload or {})
+    h = int(p.get("h", 128))
+    w = int(p.get("w", 128))
+    seed = int(p.get("seed", 0))
+    img = _dither_inputs(h, w, seed)
+
+    def run_one():
+        out = dither.fsd_dither(img)
+        out.block_until_ready()
+        return out
+
+    return RequestSpec(
+        workload=f"serve-dither/{h}x{w}", total_units=1,
+        run_one=run_one,
+        run_share=lambda group, start, k: run_one(),
+        combine=lambda outs: outs[0],
+        unit_cost=dither.unit_cost_terms(h, w),
+        bucket=f"H{pow2_bucket(h)}_W{pow2_bucket(w)}")
+
+
+# ---------------------------------------------------------------------------
+# bundle — Levenberg-Marquardt task pipeline (paper §4.10): damped
+# iterations are sequential, one unit per request; the value is the
+# final squared residual.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=4)
+def _bundle_problem(n_cams: int, n_pts: int, seed: int):
+    from repro.workloads import bundle
+
+    return bundle.make_problem(n_cams, n_pts, seed)
+
+
+def _bundle_spec(payload: Optional[dict]) -> RequestSpec:
+    from repro.workloads import bundle
+
+    p = dict(payload or {})
+    n_cams = int(p.get("n_cams", 4))
+    n_pts = int(p.get("n_pts", 256))
+    n_iters = max(int(p.get("n_iters", 3)), 1)
+    seed = int(p.get("seed", 0))
+    cams, pts, obs = _bundle_problem(n_cams, n_pts, seed)
+
+    def run_one():
+        cur, err = cams, float("inf")
+        for _ in range(n_iters):
+            cur, err = bundle.lm_step(cur, pts, obs, 1e-3)
+        return float(err)
+
+    return RequestSpec(
+        workload=f"serve-bundle/{n_cams}x{n_pts}", total_units=1,
+        run_one=run_one,
+        run_share=lambda group, start, k: run_one(),
+        combine=lambda outs: outs[0],
+        unit_cost=bundle.unit_cost_terms(n_cams, n_pts, n_iters),
+        bucket=f"C{n_cams}_P{pow2_bucket(n_pts)}_i{n_iters}")
+
+
+# ---------------------------------------------------------------------------
+# bilateral — LUT bilateral filter (paper §4.6); units are output
+# rows, shares carry the radius halo exactly like run_hybrid's.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=4)
+def _bilateral_prepared(size: int, sigma_s: float, sigma_r: float,
+                        radius: int, seed: int):
+    from repro.core.host_offload import bilateral_luts
+    from repro.workloads import bilateral as bl
+
+    img = bl.make_inputs(size, seed)
+    sp, rl = bilateral_luts(sigma_s, sigma_r, radius)
+    return img, jnp.asarray(sp), jnp.asarray(rl)
+
+
+def _bilateral_spec(payload: Optional[dict]) -> RequestSpec:
+    from repro.kernels.bilateral.ops import bilateral_filter, tuned_config
+
+    p = dict(payload or {})
+    size = int(p.get("size", 256))
+    sigma_s = float(p.get("sigma_s", 3.0))
+    sigma_r = float(p.get("sigma_r", 30.0))
+    radius = int(p.get("radius", 7))
+    seed = int(p.get("seed", 0))
+    img, sp, rl = _bilateral_prepared(size, sigma_s, sigma_r, radius,
+                                      seed)
+    H, W = img.shape
+    K = 2 * radius + 1
+    cfg = tuned_config(img, sp, rl)
+
+    def run_one():
+        out = bilateral_filter(img, sp, rl, config=cfg)
+        out.block_until_ready()
+        return out
+
+    def run_share(group, start, n):
+        lo = max(0, start - radius)
+        hi = min(H, start + n + radius)
+        out = bilateral_filter(img[lo:hi], sp, rl, config=cfg)
+        out = out[start - lo:start - lo + n]
+        out.block_until_ready()
+        return out
+
+    return RequestSpec(
+        workload=f"serve-bilat/{size}x{radius}", total_units=H,
+        run_one=run_one, run_share=run_share,
+        combine=lambda outs: jnp.concatenate(outs, axis=0),
+        unit_cost=CostTerms(flops=6.0 * W * K * K, bytes=8.0 * W * K * K),
+        comm_cost=(int(sp.size) + int(rl.size)) * 4 / 6e9,
+        bucket=f"S{pow2_bucket(size)}_r{radius}")
 
 
 # ---------------------------------------------------------------------------
@@ -365,8 +901,19 @@ def make_lm_adapter(cfg, params, prompt_len: int = 16,
 def _ensure_defaults() -> None:
     if "conv" in _REGISTRY:
         return
+    # every ALL_WORKLOADS entry (the paper's 13 Table-1 workloads) ...
     register("conv", _conv_spec)
     register("hist", _hist_spec)
     register("spmv", _spmv_spec)
     register("sort", _sort_spec)
+    register("spgemm", _spgemm_spec)
+    register("raycast", _raycast_spec)
+    register("bilateral", _bilateral_spec)
+    register("montecarlo", _montecarlo_spec)
+    register("listrank", _listrank_spec)
+    register("concomp", _concomp_spec)
+    register("lbm", _lbm_spec)
+    register("dither", _dither_spec)
+    register("bundle", _bundle_spec)
+    # ... plus the serving-only kernels
     register("attention", _attention_spec)

@@ -6,11 +6,25 @@ runtimes (the paper's heuristic for the unpredictable output volume).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import CostTerms
 from repro.core.hybrid_executor import HybridExecutor, WorkSharedOutput
+
+
+def unit_cost_terms(n: int, density: float) -> CostTerms:
+    """Analytic prior for ONE output row of the row-row product.
+
+    Each of the ~``n * density`` nonzeros in an A row gathers a dense
+    B row (length n) and multiply-accumulates it into C(i,:): flops =
+    2 * k * n with k the expected (padded-ELL) row width, bytes = the
+    gathered B rows + the vals/idx reads + the output row write.  The
+    prior only seeds placement/planning before the first measured
+    execution — measurement always overwrites it."""
+    k = max(n * density * 1.5, 1.0)          # 1.5x: ELL pad of the max row
+    return CostTerms(flops=2.0 * k * n,
+                     bytes=4.0 * (k * n + 2.0 * k + n))
 
 
 def make_matrices(n: int = 1024, density: float = 0.02, seed: int = 0):
@@ -47,8 +61,11 @@ def run_hybrid(ex: HybridExecutor, n: int = 1024, density: float = 0.02
         out.block_until_ready()
         return np.asarray(out)
 
+    # cost prior (ROADMAP open item): a cold cache plans row shares
+    # from the analytic row-row terms with zero probe runs
     ex.calibrate(lambda g, k: run_share(g, 0, k), probe_units=n // 8,
-                 workload=f"spgemm/{n}x{density}")
+                 workload=f"spgemm/{n}x{density}",
+                 unit_cost=unit_cost_terms(n, density))
     comm = n * n * density * 8 / 6e9           # C shares back
     return ex.run_work_shared(
         "spgemm", n, run_share,

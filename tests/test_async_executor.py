@@ -212,8 +212,8 @@ def test_multi_device_overlap_beats_sequential_baseline():
                          env=env)
     assert res.returncode == 0, res.stdout + res.stderr
     import json
-    line = [l for l in res.stdout.splitlines()
-            if l.startswith("RESULT")][0]
+    line = [ln for ln in res.stdout.splitlines()
+            if ln.startswith("RESULT")][0]
     r = json.loads(line[len("RESULT"):])
     assert r["n_devices"] >= 2
     assert r["mode"] == "threads"

@@ -100,7 +100,8 @@ def test_cache_roundtrip_through_file(tune_env):
 
 def test_cache_distinct_buckets_and_kernels(tune_env):
     t = iter(range(1, 100))
-    timer = lambda fn: float(next(t))
+    def timer(fn):
+        return float(next(t))
     at.autotune("k1", "s1", CANDS, _noop_maker, DEFAULT, timer=timer)
     at.autotune("k1", "s2", CANDS[:2], _noop_maker, DEFAULT, timer=timer)
     at.autotune("k2", "s1", CANDS[:2], _noop_maker, DEFAULT, timer=timer)
@@ -123,14 +124,16 @@ def test_corrupt_cache_file_degrades_gracefully(tune_env):
 # ---------------------------------------------------- escape hatches
 def test_disable_env_returns_default(tune_env, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE", "0")
-    boom = lambda fn: pytest.fail("search ran while disabled")
+    def boom(fn):
+        pytest.fail("search ran while disabled")
     cfg = at.autotune("k", "s", CANDS, _noop_maker, DEFAULT, timer=boom)
     assert cfg == DEFAULT
 
 
 def test_pin_env_overrides_search_and_cache(tune_env, monkeypatch):
     monkeypatch.setenv("REPRO_TUNE_PIN_K", '{"impl": "pinned"}')
-    boom = lambda fn: pytest.fail("search ran while pinned")
+    def boom(fn):
+        pytest.fail("search ran while pinned")
     cfg = at.autotune("k", "s", CANDS, _noop_maker, DEFAULT, timer=boom)
     assert cfg == {**DEFAULT, "impl": "pinned"}   # merged over default
 

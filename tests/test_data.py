@@ -64,7 +64,6 @@ def test_double_buffer_order_and_error():
 
 def test_prefetch_overlaps():
     import time
-    times = []
 
     def slow_gen():
         for i in range(4):

@@ -3,7 +3,6 @@ oracles (mLSTM chunkwise vs recurrent, mamba full vs step)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import (ArchConfig, MLAConfig, MoEConfig,
                                 ParallelConfig, SSMConfig, XLSTMConfig)

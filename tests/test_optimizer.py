@@ -15,7 +15,8 @@ def test_optimizer_descends_quadratic(kind):
                     weight_decay=0.0)
     params = {"w": jnp.array([[3.0, -2.0], [1.5, 4.0]])}
     state = init_opt_state(cfg, params)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
     for step in range(100):
         g = jax.grad(loss)(params)
         params, state, _ = apply_updates(cfg, params, g, state,

@@ -471,3 +471,405 @@ def test_attention_adapter_share_matches_run_one():
     np.testing.assert_allclose(np.asarray(spec.combine(parts)), whole,
                                rtol=2e-3, atol=2e-3)
     assert spec.total_units == 4
+
+
+# ---------------------------------------------------------------------------
+# the full Table-1 set: every workload is servable, every adapter has
+# a cost prior, and a cold cache places with zero probe runs
+# ---------------------------------------------------------------------------
+# payloads small enough that the whole parametrized sweep stays fast
+SMALL_PAYLOADS = {
+    "conv": {"size": 64, "ksize": 5},
+    "hist": {"n": 1 << 12, "n_bins": 64},
+    "spmv": {"n": 128, "density": 0.05},
+    "sort": {"n": 1 << 10},
+    "spgemm": {"n": 96, "density": 0.05},
+    "raycast": {"n_rays": 256, "d": 8},
+    "bilateral": {"size": 48, "radius": 3},
+    "montecarlo": {"n_photons": 1 << 10, "unit": 1 << 7},
+    "listrank": {"n": 1 << 8},
+    "concomp": {"n": 1 << 8},
+    "lbm": {"d": 6, "n_steps": 2},
+    "dither": {"h": 32, "w": 32},
+    "bundle": {"n_cams": 2, "n_pts": 32},
+}
+
+
+def test_every_table1_workload_is_registered():
+    from repro.workloads import ALL_WORKLOADS
+    from repro.workloads import requests as adapters
+
+    assert len(ALL_WORKLOADS) == 13
+    missing = [w for w in ALL_WORKLOADS if w not in adapters.available()]
+    assert not missing, f"Table-1 workloads without adapters: {missing}"
+
+
+def _all_workloads():
+    from repro.workloads import ALL_WORKLOADS
+    return ALL_WORKLOADS
+
+
+@pytest.mark.parametrize("wl", [
+    "conv", "hist", "spmv", "sort", "spgemm", "raycast", "bilateral",
+    "montecarlo", "listrank", "concomp", "lbm", "dither", "bundle"])
+def test_cold_prior_covers_workload(wl):
+    """Zero-probe cold placement: every Table-1 adapter ships a
+    ``unit_cost`` prior the cost model can price for every group —
+    the condition under which a fresh process schedules the request
+    without a single probe run."""
+    from repro.core import cost_model
+    from repro.workloads import requests as adapters
+
+    spec = adapters.make_request(wl, SMALL_PAYLOADS[wl])
+    uc = spec.unit_cost
+    assert uc is not None, f"{wl} has no cost prior"
+    terms = list(uc.values()) if isinstance(uc, dict) else [uc]
+    for t in terms:
+        assert cost_model.predict(t) > 0
+
+
+@pytest.mark.parametrize("wl", ["spgemm", "raycast", "concomp"])
+def test_cold_calibrate_plans_with_zero_probes(wl):
+    """Executor-level zero-probe contract for the new adapters: a
+    cold cache + a cost prior plans the work share without executing
+    a single probe (``last_probe_runs == 0``)."""
+    from repro.workloads import requests as adapters
+
+    spec = adapters.make_request(wl, SMALL_PAYLOADS[wl])
+    groups = [DeviceGroup("accel", [], "accel"),
+              DeviceGroup("host", [], "host")]
+    ex = HybridExecutor(groups=groups, n_chunks=4)
+    ex.calibrate(lambda g, k: spec.run_share(g, 0, k),
+                 probe_units=max(spec.total_units // 8, 1),
+                 workload=spec.workload, unit_cost=spec.unit_cost)
+    assert ex.last_probe_runs == 0
+
+
+def test_spgemm_adapter_matches_dense_product():
+    import numpy as np
+
+    from repro.workloads import requests as adapters
+    from repro.workloads import spgemm as spgemm_wl
+
+    spec = adapters.make_request("spgemm", SMALL_PAYLOADS["spgemm"])
+    A, B = spgemm_wl.make_matrices(96, 0.05, 0)
+    np.testing.assert_allclose(np.asarray(spec.run_one()), A @ B,
+                               rtol=1e-3, atol=1e-3)
+    # row shares slice the same packed arrays run_one uses
+    h = spec.total_units // 2
+    parts = [spec.run_share("accel", 0, h),
+             spec.run_share("host", h, spec.total_units - h)]
+    np.testing.assert_allclose(np.asarray(spec.combine(parts)),
+                               np.asarray(spec.run_one()),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_raycast_adapter_share_matches_run_one():
+    import numpy as np
+
+    from repro.workloads import requests as adapters
+
+    spec = adapters.make_request("raycast", SMALL_PAYLOADS["raycast"])
+    whole = np.asarray(spec.run_one())
+    h = spec.total_units // 2
+    parts = [spec.run_share("accel", 0, h),
+             spec.run_share("host", h, spec.total_units - h)]
+    np.testing.assert_allclose(np.asarray(spec.combine(parts)), whole,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bilateral_adapter_share_matches_run_one():
+    """The halo slicing (lo = start - radius, trimmed back out) is the
+    trickiest indexing of the new adapters — shares must reproduce the
+    dedicated rows exactly."""
+    import numpy as np
+
+    from repro.workloads import requests as adapters
+
+    spec = adapters.make_request("bilateral", SMALL_PAYLOADS["bilateral"])
+    whole = np.asarray(spec.run_one())
+    h = spec.total_units // 2
+    parts = [spec.run_share("accel", 0, h),
+             spec.run_share("host", h, spec.total_units - h)]
+    np.testing.assert_allclose(np.asarray(spec.combine(parts)), whole,
+                               rtol=1e-5, atol=1e-5)
+    # three-way split exercises an interior share with halo on both
+    # sides
+    t = spec.total_units // 3
+    parts = [spec.run_share("accel", 0, t),
+             spec.run_share("host", t, t),
+             spec.run_share("accel", 2 * t, spec.total_units - 2 * t)]
+    np.testing.assert_allclose(np.asarray(spec.combine(parts)), whole,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_montecarlo_adapter_share_matches_run_one():
+    from repro.workloads import requests as adapters
+
+    spec = adapters.make_request("montecarlo",
+                                 SMALL_PAYLOADS["montecarlo"])
+    whole = spec.run_one()
+    h = spec.total_units // 2
+    combo = spec.combine([
+        spec.run_share("accel", 0, h),
+        spec.run_share("host", h, spec.total_units - h)])
+    assert abs(whole - combo) < 1e-4
+
+
+def test_concomp_adapter_partitions_match():
+    """Subgraph shares + cross-edge merge must produce the same
+    component partition as the single-device path (labels may be
+    renamed)."""
+    import numpy as np
+
+    from repro.workloads import requests as adapters
+
+    spec = adapters.make_request("concomp", SMALL_PAYLOADS["concomp"])
+    assert spec.whole_shares and set(spec.unit_cost) == {"accel", "host"}
+
+    def canon(lab):
+        first = {}
+        return [first.setdefault(int(x), len(first)) for x in lab]
+
+    one = canon(np.asarray(spec.run_one()))
+    h = spec.total_units // 2
+    two = canon(np.asarray(spec.combine([
+        spec.run_share("accel", 0, h),
+        spec.run_share("host", h, spec.total_units - h)])))
+    assert one == two
+
+
+def test_sequential_request_adapters_run_whole():
+    """listrank / lbm / dither / bundle are indivisible requests
+    (total_units == 1) whose values check out against the workload
+    modules' own functions."""
+    import numpy as np
+
+    from repro.workloads import dither as dither_wl
+    from repro.workloads import listrank as lr
+    from repro.workloads import requests as adapters
+
+    lr_spec = adapters.make_request("listrank", SMALL_PAYLOADS["listrank"])
+    succ, _ = lr.make_list(1 << 8, 0)
+    np.testing.assert_array_equal(
+        lr_spec.run_one(), np.asarray(lr.pointer_jump_rank(succ)))
+
+    d_spec = adapters.make_request("dither", SMALL_PAYLOADS["dither"])
+    img = dither_wl.make_image(32, 32, 0)
+    np.testing.assert_array_equal(np.asarray(d_spec.run_one()),
+                                  np.asarray(dither_wl.fsd_dither(img)))
+
+    lbm_spec = adapters.make_request("lbm", SMALL_PAYLOADS["lbm"])
+    out = np.asarray(lbm_spec.run_one())
+    assert out.shape == (19, 6, 6, 6)
+    # BGK collide+stream conserves mass
+    np.testing.assert_allclose(out.sum(), 6 ** 3, rtol=1e-3)
+
+    b_spec = adapters.make_request("bundle", SMALL_PAYLOADS["bundle"])
+    err = b_spec.run_one()
+    assert np.isfinite(err) and err >= 0
+    for spec in (lr_spec, d_spec, lbm_spec, b_spec):
+        assert spec.total_units == 1
+
+
+# ---------------------------------------------------------------------------
+# array-level batching: merge/demux round trips
+# ---------------------------------------------------------------------------
+def test_sort_merge_demux_bit_identical():
+    import numpy as np
+
+    from repro.workloads import requests as adapters
+
+    specs = [adapters.make_request("sort", {"n": 1 << 10, "seed": s})
+             for s in range(3)]
+    merged = specs[0].merge(specs)
+    assert merged is not None
+    batched = merged.spec.run_one()
+    for i, s in enumerate(specs):
+        np.testing.assert_array_equal(np.asarray(merged.demux(batched, i)),
+                                      np.asarray(s.run_one()))
+    # the work-shared form of the merged spec agrees too
+    parts = [merged.spec.run_share("accel", 0, 2),
+             merged.spec.run_share("host", 2, 1)]
+    np.testing.assert_array_equal(np.asarray(merged.spec.combine(parts)),
+                                  np.asarray(batched))
+
+
+def test_attention_merge_demux_bit_identical():
+    import numpy as np
+
+    from repro.workloads import requests as adapters
+
+    payloads = [{"batch": 2, "seq": 32, "heads": 2, "dim": 16, "seed": s}
+                for s in range(3)]
+    specs = [adapters.make_request("attention", p) for p in payloads]
+    merged = specs[0].merge(specs)
+    assert merged is not None
+    assert merged.spec.total_units == 6      # real rows, not pad rows
+    batched = merged.spec.run_one()
+    for i, s in enumerate(specs):
+        np.testing.assert_array_equal(np.asarray(merged.demux(batched, i)),
+                                      np.asarray(s.run_one()))
+
+
+def test_raycast_merge_refuses_mixed_volumes():
+    from repro.workloads import requests as adapters
+
+    a = adapters.make_request("raycast", {"n_rays": 256, "d": 8,
+                                          "seed": 0})
+    b = adapters.make_request("raycast", {"n_rays": 256, "d": 8,
+                                          "seed": 1})
+    merged = a.merge([a, b])
+    assert merged is None                    # different volumes
+    same = adapters.make_request("raycast", {"n_rays": 256, "d": 8,
+                                             "seed": 0})
+    assert a.merge([a, same]) is not None
+
+
+def test_scheduler_merged_batch_results_identical():
+    """A same-bucket burst through the scheduler must coalesce into a
+    merged (stacked) execution whose per-request results are exactly
+    the solo results."""
+    import numpy as np
+
+    from repro.workloads import requests as adapters
+
+    s = Scheduler(groups=[DeviceGroup("accel", [], "accel"),
+                          DeviceGroup("host", [], "host")],
+                  max_batch=8, batch_window_s=0.05,
+                  split_overhead_s=100.0, shared_span_factor=1.0)
+    futs = [s.submit("sort", {"n": 1 << 10, "seed": i}) for i in range(6)]
+    vals = [np.asarray(f.result(timeout=60)) for f in futs]
+    s.shutdown()
+    for i, v in enumerate(vals):
+        solo = adapters.make_request("sort", {"n": 1 << 10, "seed": i})
+        np.testing.assert_array_equal(v, np.asarray(solo.run_one()))
+    assert s.stats.completed == 6
+
+
+# ---------------------------------------------------------------------------
+# dedicated-span contention projections (placement satellite fix)
+# ---------------------------------------------------------------------------
+def test_dedicated_contention_scales_overlapped_span():
+    loads = [GroupLoad("a", unit_time=0.001, busy_until=0.0),
+             GroupLoad("b", unit_time=0.001, busy_until=1.0)]
+    # whole span overlaps b's busy window -> doubled at factor 2
+    d = plan_placement(100, loads, now=0.0, split_overhead_s=100.0,
+                       contention_factor=2.0)
+    assert d.groups == ["a"]
+    assert d.est_exec_s == pytest.approx(0.2)
+    # default factor 1.0 keeps the old projection
+    d1 = plan_placement(100, loads, now=0.0, split_overhead_s=100.0)
+    assert d1.est_exec_s == pytest.approx(0.1)
+
+
+def test_dedicated_contention_partial_overlap():
+    loads = [GroupLoad("a", unit_time=0.001, busy_until=0.0),
+             GroupLoad("b", unit_time=0.001, busy_until=0.05)]
+    d = plan_placement(100, loads, now=0.0, split_overhead_s=100.0,
+                       contention_factor=2.0)
+    # 0.05s contended at half rate (0.025 span-units done), remaining
+    # 0.075 at full rate
+    assert d.t_finish == pytest.approx(0.125)
+    # a free host (nothing else busy) pays no contention
+    loads = [GroupLoad("a", unit_time=0.001, busy_until=0.0),
+             GroupLoad("b", unit_time=0.001, busy_until=0.0)]
+    d = plan_placement(100, loads, now=0.0, split_overhead_s=100.0,
+                       contention_factor=2.0)
+    assert d.est_exec_s == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# staleness decay (estimate healing without exploration)
+# ---------------------------------------------------------------------------
+def test_get_decayed_shrinks_stale_entry_toward_peers():
+    import time as _time
+
+    from repro.core.calibration import get_calibration_cache
+
+    cache = get_calibration_cache()
+    cache.put("wl", "accel", 1.0)            # poisoned slow
+    cache.put("wl", "host", 1e-3)
+    peers = [("host", 1.0)]
+    # fresh entry: essentially the raw value
+    assert cache.get_decayed("wl", "accel", peers=peers, tau_s=60.0) \
+        == pytest.approx(1.0, rel=0.01)
+    # age it far beyond tau: shrinks to the peer mean
+    cache._store[cache.key("wl", "accel")].t_obs = _time.time() - 1e6
+    v = cache.get_decayed("wl", "accel", peers=peers, tau_s=60.0)
+    assert v == pytest.approx(1e-3, rel=0.01)
+    # tau=0 disables decay; missing entries still miss
+    assert cache.get_decayed("wl", "accel", peers=peers, tau_s=0.0) \
+        == pytest.approx(1.0)
+    assert cache.get_decayed("nope", "accel", peers=peers,
+                             tau_s=60.0) is None
+
+
+def test_staleness_decay_heals_lane_without_exploration():
+    """With exploration DISABLED, a stale-slow estimate must still
+    heal: decay shrinks it toward the healthy lane's number, traffic
+    returns, and the fresh measurement replaces the stale one."""
+    import time as _time
+
+    from repro.core.calibration import get_calibration_cache
+
+    cache = get_calibration_cache()
+    cache.put("wl", "accel", 1.0)            # 1 s/unit: poisoned
+    # model a stale previous-process value: old timestamp + from disk
+    # (so the first fresh measurement REPLACES instead of blending)
+    cache._store[cache.key("wl", "accel")].t_obs = _time.time() - 1e6
+    cache._store[cache.key("wl", "accel")].in_process = False
+    cache.put("wl", "host", 1e-3)
+
+    factory = toy_factory(work_s=0.001, units=4)
+
+    def spying_factory(workload, payload):
+        return factory(workload, payload)
+
+    s = make_scheduler(spec_factory=spying_factory, max_batch=1,
+                       split_overhead_s=100.0, explore_every=0,
+                       staleness_tau_s=60.0)
+    futs = [s.submit("wl", i) for i in range(16)]
+    for f in futs:
+        f.result(timeout=30)
+    s.shutdown()
+    healed = cache.get("wl", "accel")
+    assert healed is not None and healed < 0.1, \
+        f"stale accel estimate never healed without exploration: {healed}"
+
+
+# ---------------------------------------------------------------------------
+# self-probed shared span factor
+# ---------------------------------------------------------------------------
+def test_span_factor_self_probe_bounds_and_pin(monkeypatch):
+    from repro.serve import scheduler as sched_mod
+
+    sched_mod._SPAN_FACTOR_CACHE.clear()
+    s = make_scheduler(spec_factory=toy_factory())
+    try:
+        # probed once at startup, clamped to the meaningful range
+        assert 1.0 <= s.shared_span_factor <= 2.0
+        assert sched_mod._SPAN_FACTOR_CACHE, "probe result not memoized"
+    finally:
+        s.shutdown()
+    # a second scheduler reuses the memoized probe
+    before = dict(sched_mod._SPAN_FACTOR_CACHE)
+    s2 = make_scheduler(spec_factory=toy_factory())
+    try:
+        assert dict(sched_mod._SPAN_FACTOR_CACHE) == before
+    finally:
+        s2.shutdown()
+    # env pin skips the probe entirely
+    monkeypatch.setenv("REPRO_SERVE_SPAN_FACTOR", "1.37")
+    s3 = make_scheduler(spec_factory=toy_factory())
+    try:
+        assert s3.shared_span_factor == pytest.approx(1.37)
+    finally:
+        s3.shutdown()
+    # fifo never shares -> never probes
+    monkeypatch.delenv("REPRO_SERVE_SPAN_FACTOR")
+    s4 = make_scheduler(spec_factory=toy_factory(), policy="fifo")
+    try:
+        assert s4.shared_span_factor == 1.0
+    finally:
+        s4.shutdown()

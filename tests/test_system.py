@@ -3,14 +3,12 @@ import subprocess
 import sys
 import tempfile
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ParallelConfig
 from repro.core.hybrid_executor import HybridExecutor
 from repro.data.pipeline import DataConfig
-from repro.models import model_zoo, param
 from repro.optim.optimizer import OptConfig
 from repro.serve.serve_step import generate
 from repro.train.trainer import Trainer, TrainerConfig

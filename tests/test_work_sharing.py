@@ -6,7 +6,6 @@ random-trial tests below always run.
 """
 import random
 
-import numpy as np
 import pytest
 
 from repro.core import work_sharing as ws

@@ -1,10 +1,8 @@
 """Workload VALUE correctness: the hybrid execution must produce the
 same answer as a trusted reference (the paper's hybrid = same math)."""
-import jax
 import jax.numpy as jnp
 import networkx as nx
 import numpy as np
-import pytest
 
 from repro.core.hybrid_executor import HybridExecutor
 

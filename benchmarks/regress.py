@@ -18,8 +18,9 @@ lower-is-better by construction) gate at ``--serving-threshold``
 (default 60%) with a 20 ms minimum delta: open-loop queueing tails are
 noisier than steady-state kernels, but a persistent multi-x p95 or
 throughput regression (e.g. a broken placement path serializing all
-lanes) must still fail.  FIFO-baseline rows, the fifo/sched ratio and
-probe-count rows are informational only (the baseline saturates by
+lanes) must still fail.  Baseline rows (FIFO lanes, the monolithic LM
+adapter), the fifo/sched and continuous/monolithic ratios and
+probe-count rows are informational only (the baselines saturate by
 design; ratios are higher-is-better).  Missing file, a single run,
 or first-seen kernels all pass (no trajectory yet -> nothing to gate).
 
@@ -74,12 +75,15 @@ def check(rows, threshold: float, min_delta_us: float = 100.0,
     failures, lines = [], []
     for backend, name in sorted(by_name):
         entries = by_name[(backend, name)]
-        if name.startswith(("serving/p95_ratio", "serving/cold_probe")):
+        if name.startswith(("serving/p95_ratio", "serving/cold_probe",
+                            "serving/lm_ratio")):
             continue                      # higher-is-better / count rows
-        if name.startswith("serving/") and "_fifo_" in name:
-            # the FIFO baseline saturates by design at the top arrival
-            # rate; its (legitimately bistable) queueing tail is
-            # context for the ratio, not a trajectory of ours
+        if name.startswith("serving/") and ("_fifo_" in name
+                                            or "_mono_" in name):
+            # baseline rows: the FIFO lane and the monolithic LM
+            # adapter saturate by design at the top arrival rate; their
+            # (legitimately bistable) queueing tails are context for
+            # the ratio rows, not trajectories of ours
             continue
         cold = name.startswith("cold_start/")
         serving = name.startswith("serving/")

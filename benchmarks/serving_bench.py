@@ -21,6 +21,16 @@ arrivals never wait for completions: an overloaded scheduler pays the
 full queueing delay in its latency tail, exactly like production
 traffic.
 
+The LM section (``run_lm``) drives an open-loop Poisson LM trace
+through BOTH per-arch adapters — monolithic ``make_lm_adapter``
+(whole-request generate) vs ``make_continuous_lm_adapter`` (the PR-6
+iteration-level engine: decode step as the scheduling quantum, live
+requests stacked into one slot-batched call, joins/evictions at step
+boundaries) — and gates continuous >= 1.5x monolithic throughput at a
+saturating arrival rate with no p50 regression at 0.5x, plus engine
+bit-identity vs solo decode and the fresh-process zero-probe engine
+placement (``lm_cold_start_check``).
+
 Every run asserts the accounting invariant: submitted == completed +
 structured rejections (a request dropped *without* a rejection is a
 scheduler bug, not load).  ``--smoke`` (CI, 2 forced host devices)
@@ -182,36 +192,15 @@ def _null():
 
 
 def _warm_merged(mix, max_batch: int = 8):
-    """Warm the array-level merged batch paths: merged executions run
-    pow2-padded stacks, and each padded shape jit-compiles once per
-    (shape, DEVICE) — measured ~110 ms per compile here, enough to
-    cascade an open-loop backlog when it lands mid-trace.  Build the
-    merged specs directly and run them under EVERY group's device
-    context (scheduler-driven warm bursts can't guarantee lane
-    coverage: placement would keep picking the same idle lane).
-    Compile time is a property of the process, not of the policy
-    under test — same rationale as the dedicated warmup."""
-    import jax
-
-    from repro.core.hybrid_executor import detect_platform
+    """Warm the array-level merged batch paths ahead of the measured
+    traces (a pow2-padded stack shape jit-compiles once per (shape,
+    device) — enough to cascade an open-loop backlog when it lands
+    mid-trace).  Thin wrapper: the mechanism lives behind the adapter
+    registry now (``requests.precompile_merged``), where adapter
+    registration can also kick it off in the background."""
     from repro.workloads import requests as adapters
 
-    groups, _ = detect_platform()
-    for wl, payload in mix:
-        probe = adapters.make_request(wl, payload)
-        if getattr(probe, "merge", None) is None:
-            continue
-        for k in (2, 4, max_batch):
-            merged = probe.merge(
-                [adapters.make_request(wl, payload) for _ in range(k)])
-            if merged is None:
-                continue
-            for g in groups:
-                dev = g.devices[0] if g.devices else None
-                ctx = (jax.default_device(dev) if dev is not None
-                       else _null())
-                with ctx:
-                    merged.spec.run_one()
+    adapters.precompile_merged(mix, max_batch=max_batch)
 
 
 def make_trace(rate: float, n_requests: int, mix, seed: int = 0,
@@ -297,6 +286,8 @@ def drive(policy: str, trace, max_batch: int = 8,
         "shared": st.shared,
         "dedicated": st.dedicated, "probe_runs": st.probe_runs,
         "span_factor": sched.shared_span_factor,
+        "engine_steps": st.engine_steps, "engine_joins": st.engine_joins,
+        "engine_evictions": st.engine_evictions,
         "dropped_without_rejection": st.submitted - accounted,
     }
 
@@ -360,6 +351,180 @@ def two_process_check(verbose: bool = True):
         print(f"serving/cold_probe_runs_procB,{b['probe_runs']:.0f},"
               f"target=0_zero_probe_persisted_calibration")
     return a["probe_runs"], b["probe_runs"]
+
+
+# ---------------------------------------------------------------------------
+# LM continuous batching: decode step as the scheduling quantum (PR 6)
+# ---------------------------------------------------------------------------
+# Bump when the LM trace or adapter shapes change (fresh regress
+# trajectory, same rationale as MIX_VERSION).
+LM_VERSION = "l1"
+
+_LM_CHILD_CODE = r"""
+import json, os, sys
+sys.path.insert(0, os.path.join(os.environ["REPRO_ROOT"], "src"))
+import jax
+from repro.configs import registry
+from repro.models import model_zoo, param
+from repro.serve.scheduler import Scheduler
+from repro.workloads import requests as adapters
+
+cfg = registry.get("minicpm3-4b").reduced()
+params = param.values(model_zoo.init(cfg, jax.random.key(0)))
+wl = adapters.make_continuous_lm_adapter(cfg, params, prompt_len=8,
+                                         new_tokens=8,
+                                         warm_background=False)
+sched = Scheduler()
+sched.submit(wl, {"batch": 1, "seed": 1}).result(timeout=300)
+plan = sched.engine_placements[wl]
+probes = sched.stats.probe_runs
+sched.shutdown()
+print("RESULT" + json.dumps({"probe_runs": probes,
+                             "prefill": plan.prefill_group,
+                             "decode": plan.decode_group}))
+"""
+
+
+def lm_cold_start_check(verbose: bool = True):
+    """A fresh process must place the continuous engine's prefill and
+    decode lanes from the CostTerms priors alone — zero probe runs —
+    with the model prior and autotune search disabled (the engine
+    never probes; this demonstrates the zero-cold-start contract)."""
+    import tempfile
+
+    tmp = tempfile.mkdtemp(prefix="repro-serve-lmcold-")
+    env = dict(os.environ)
+    env.update({
+        "REPRO_ROOT": _ROOT,
+        "REPRO_CALIB_CACHE": os.path.join(tmp, "calibration.json"),
+        "REPRO_TUNE_CACHE": os.path.join(tmp, "autotune.json"),
+        "REPRO_COST_MODEL": "0",
+        "REPRO_AUTOTUNE": "0",
+    })
+    res = subprocess.run([sys.executable, "-c", _LM_CHILD_CODE],
+                         capture_output=True, text=True, timeout=560,
+                         env=env, cwd=_ROOT)
+    if res.returncode != 0:
+        raise RuntimeError("LM cold-start child failed:\n"
+                           + res.stdout + res.stderr)
+    line = [ln for ln in res.stdout.splitlines()
+            if ln.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    if verbose:
+        print(f"serving/cold_probe_lm_{LM_VERSION},"
+              f"{out['probe_runs']:.0f},"
+              f"prefill={out['prefill']}|decode={out['decode']}|"
+              f"target=0_priors_place_engine_lanes")
+    return out
+
+
+def run_lm(smoke: bool, cold_check: bool = True):
+    """Continuous batching vs the monolithic LM adapter on the SAME
+    open-loop Poisson trace: at a saturating arrival rate the step
+    quantum stacks live decodes into one slot-batched call (throughput
+    win); at 0.5x one lane's capacity both keep up and the p50 must
+    not regress.  Returns (rows, results, failures)."""
+    import jax
+
+    from repro.configs import registry
+    from repro.models import model_zoo, param
+    from repro.serve.scheduler import Scheduler
+    from repro.serve.serve_step import generate
+    from repro.workloads import requests as adapters
+
+    prompt_len, new_tokens = 8, 16
+    cfg = registry.get("minicpm3-4b").reduced()
+    params = param.values(model_zoo.init(cfg, jax.random.key(0)))
+    mono = adapters.make_lm_adapter(cfg, params, prompt_len=prompt_len,
+                                    new_tokens=new_tokens)
+    cb = adapters.make_continuous_lm_adapter(
+        cfg, params, prompt_len=prompt_len, new_tokens=new_tokens)
+    adapters.wait_precompiled(timeout=600)
+
+    payload = {"batch": 1, "seed": 1}
+    spec = adapters.make_request(mono, payload)
+    spec.run_one()                                   # compile
+    t0 = time.perf_counter()
+    spec.run_one()
+    t_service = time.perf_counter() - t0
+    base_rate = 1.0 / max(t_service, 1e-6)
+
+    # bit-identity: the engine's demuxed output vs solo generate()
+    s = Scheduler()
+    eng_out = np.asarray(s.submit(cb, payload).result(timeout=300))
+    s.shutdown()
+    prompt = adapters.make_request(cb, payload).arrays[0]
+    solo = np.asarray(generate(cfg, params, prompt, new_tokens,
+                               cache_len=prompt_len + new_tokens + 1))
+    bit_identical = bool(np.array_equal(eng_out, solo))
+
+    # warm both scheduler paths (compile time is a property of the
+    # process, not of the adapter under test)
+    n_warm = 6
+    drive("cost", make_trace(base_rate, n_warm, [(mono, payload)], seed=3))
+    drive("cost", make_trace(base_rate, n_warm, [(cb, payload)], seed=3))
+
+    n = 24 if smoke else 48
+    rows, failures = [], []
+    results = {"t_service_s": t_service, "bit_identical": bit_identical,
+               "rates": []}
+    dropped = 0
+    ratio_sat = 0.0
+    for tag, mult in (("x0.5", 0.5), ("xsat", 2.5)):
+        rate = mult * base_rate
+        m = drive("cost", make_trace(rate, n, [(mono, payload)], seed=13))
+        c = drive("cost", make_trace(rate, n, [(cb, payload)], seed=13))
+        dropped += (m["dropped_without_rejection"]
+                    + c["dropped_without_rejection"])
+        vtag = f"{tag}_{LM_VERSION}"
+        rows += [
+            f"serving/lm_p50_cb_{vtag},{c['p50_ms'] * 1e3:.0f},"
+            f"rate={rate:.1f}rps|p95={c['p95_ms']:.1f}ms|"
+            f"served={c['served']}|steps={c['engine_steps']}|"
+            f"joins={c['engine_joins']}",
+            f"serving/lm_p50_mono_{vtag},{m['p50_ms'] * 1e3:.0f},"
+            f"rate={rate:.1f}rps|p95={m['p95_ms']:.1f}ms|"
+            f"served={m['served']}",
+            f"serving/lm_tput_cb_{vtag},"
+            f"{1e6 / max(c['throughput_rps'], 1e-9):.0f},"
+            f"us_per_req|{c['throughput_rps']:.2f}rps",
+            f"serving/lm_tput_mono_{vtag},"
+            f"{1e6 / max(m['throughput_rps'], 1e-9):.0f},"
+            f"us_per_req|{m['throughput_rps']:.2f}rps",
+        ]
+        results["rates"].append({"rate_rps": rate, "mono": m, "cb": c})
+        if tag == "xsat":
+            ratio_sat = (c["throughput_rps"]
+                         / max(m["throughput_rps"], 1e-9))
+            rows.append(
+                f"serving/lm_ratio_{vtag},{ratio_sat * 1e6:.0f},"
+                f"cb_tput/mono_tput={ratio_sat:.2f}x|target>=1.5")
+        else:
+            # no-p50-regression gate at the easy rate (1.25x absorbs
+            # short-trace scheduling noise; a real regression — the
+            # engine serializing what the monolithic path pipelined —
+            # blows far past it)
+            if c["p50_ms"] > 1.25 * m["p50_ms"]:
+                failures.append(
+                    f"LM continuous p50 regressed at 0.5x rate "
+                    f"({c['p50_ms']:.1f}ms vs mono {m['p50_ms']:.1f}ms)")
+    results["tput_ratio_at_sat"] = ratio_sat
+    results["dropped_without_rejection"] = dropped
+
+    n_dev = len(jax.devices())
+    if not bit_identical:
+        failures.append("LM engine output != solo generate() "
+                        "(bit-identity violated)")
+    if n_dev >= 2 and ratio_sat < 1.5:
+        failures.append(f"LM continuous throughput only {ratio_sat:.2f}x "
+                        f"monolithic at saturating rate (target >=1.5x)")
+    if cold_check:
+        cold = lm_cold_start_check()
+        results["cold_start"] = cold
+        if cold["probe_runs"] != 0:
+            failures.append(f"LM engine cold start paid "
+                            f"{cold['probe_runs']} probe run(s)")
+    return rows, results, failures
 
 
 # ---------------------------------------------------------------------------
@@ -478,6 +643,13 @@ def run(smoke: bool = False, json_out: bool = False,
     ]
     results["full13"] = full
     results["full13_missing_adapters"] = missing13
+
+    # --- LM continuous batching vs monolithic (PR 6 tentpole) ---
+    lm_rows, lm_results, lm_failures = run_lm(smoke,
+                                              cold_check=two_process)
+    rows += lm_rows
+    results["lm"] = lm_results
+    dropped_total += lm_results["dropped_without_rejection"]
     results["dropped_without_rejection"] = dropped_total
 
     probes_b = None
@@ -518,6 +690,9 @@ def run(smoke: bool = False, json_out: bool = False,
         print(f"serving_bench: FAIL — full-13 mix paid "
               f"{full['probe_runs']} probe run(s); cost-term priors "
               f"must cover every Table-1 workload")
+        ok = False
+    for msg in lm_failures:
+        print(f"serving_bench: FAIL — {msg}")
         ok = False
     # the latency win needs real parallel lanes: on a single device
     # the scheduler serializes executions (see Scheduler._lane_locks)

@@ -63,6 +63,10 @@ class ServeStats:
     dedicated: int = 0               # executions placed on one group
     shared: int = 0                  # executions work-shared (paper split)
     probe_runs: int = 0              # calibration probe executions paid
+    engine_steps: int = 0            # continuous-engine batched step calls
+    engine_joins: int = 0            # rows joined a running batch at a
+    #                                  step boundary (continuous batching)
+    engine_evictions: int = 0        # finished rows evicted from slots
     queue_depth: EWMA = field(default_factory=EWMA)
     wait_s: EWMA = field(default_factory=EWMA)       # submit -> start
     service_s: EWMA = field(default_factory=EWMA)    # start -> resolve
@@ -85,6 +89,9 @@ class ServeStats:
             "merged_batches": self.merged_batches,
             "dedicated": self.dedicated, "shared": self.shared,
             "probe_runs": self.probe_runs,
+            "engine_steps": self.engine_steps,
+            "engine_joins": self.engine_joins,
+            "engine_evictions": self.engine_evictions,
             "in_flight": self.in_flight,
             "queue_depth_ewma": self.queue_depth.value,
             "wait_ewma_s": self.wait_s.value,

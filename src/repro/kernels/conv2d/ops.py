@@ -91,6 +91,21 @@ def tuned_config(img, w) -> Config:
         cost_fn=lambda cfg: cost_terms(cfg, H, W, K))
 
 
+@jax.jit
+def conv2d_batched(imgs, ws):
+    """Batched 'same' 2-D correlation: ``(R, H, W)`` images against
+    ``(R, K, K)`` per-row kernels -> ``(R, H, W)``, one vmapped
+    XLA-conv call for the whole stack.
+
+    The serving merge hook stacks same-bucket conv requests into this
+    single launch.  Pinned to the ``xla_conv`` impl because vmap of
+    ``conv2d_ref`` is bit-identical per row to the solo xla_conv path
+    (measured; the shift-add and Pallas impls reassociate under vmap
+    and are NOT) — the merge hook therefore only engages when the solo
+    path resolves to xla_conv, keeping merged == solo exact."""
+    return jax.vmap(conv2d_ref)(imgs, ws)
+
+
 def conv2d(img, w, *, use_kernel: bool = True,
            config: Optional[Config] = None,
            row_tile: Optional[int] = None):

@@ -91,6 +91,19 @@ def tuned_config(x, n_bins: int) -> Config:
         cost_fn=lambda cfg: cost_terms(cfg, n, n_bins))
 
 
+@functools.partial(jax.jit, static_argnames=("n_bins",))
+def histogram_rows(x2d: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """Row-wise batched histogram: ``(R, n)`` int values in
+    ``[0, n_bins)`` -> ``(R, n_bins)`` counts, one vmapped bincount
+    kernel call for the whole stack.
+
+    The serving merge hook uses this to stack same-bucket histogram
+    requests into ONE launch.  Counts are exact integer sums, so every
+    row equals the solo ``histogram`` of that row bit-for-bit no matter
+    which impl the solo path autotuned to."""
+    return jax.vmap(lambda row: hist_ref(row, n_bins))(x2d)
+
+
 def histogram(x: jnp.ndarray, n_bins: int, *, use_kernel: bool = True,
               config: Optional[Config] = None,
               tile: Optional[int] = None) -> jnp.ndarray:

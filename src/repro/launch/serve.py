@@ -43,8 +43,15 @@ def run_stream(cfg, params, args) -> None:
     from repro.serve.request_queue import RequestRejected
     from repro.workloads import requests as adapters
 
-    wl = adapters.make_lm_adapter(cfg, params, prompt_len=args.prompt_len,
-                                  new_tokens=args.new_tokens)
+    if args.continuous:
+        wl = adapters.make_continuous_lm_adapter(
+            cfg, params, prompt_len=args.prompt_len,
+            new_tokens=args.new_tokens)
+        adapters.wait_precompiled(timeout=600)
+    else:
+        wl = adapters.make_lm_adapter(cfg, params,
+                                      prompt_len=args.prompt_len,
+                                      new_tokens=args.new_tokens)
     sched = Scheduler(max_batch=args.max_batch,
                       batch_window_s=args.window_ms / 1e3)
     # one warmup request outside the measured trace: jit compilation is
@@ -73,15 +80,24 @@ def run_stream(cfg, params, args) -> None:
         futs.append((time.perf_counter(), f))
         # open-loop: the NEXT arrival does not wait for this result
         time.sleep(float(rng.exponential(1.0 / max(args.rate, 1e-6))))
-    lat, rejected = [], 0
+    lat, decode, rejected = [], [], 0
     for t_sub, f in futs:
         try:
             f.result(timeout=600)
             lat.append(done_at[id(f)] - t_sub)
+            # per-request decode span from the executing lane's stamps
+            # (the engine stamps first token after prefill and last
+            # token at final eviction) — completion-callback time alone
+            # can't separate queueing from decode
+            t_ft = f.meta.get("t_first_token")
+            t_lt = f.meta.get("t_last_token")
+            if t_ft is not None and t_lt is not None:
+                decode.append(t_lt - t_ft)
         except RequestRejected:
             rejected += 1
     wall = (max(done_at.values()) - t0) if done_at \
         else time.perf_counter() - t0
+    placements = dict(sched.engine_placements)
     sched.shutdown()
     pct = _percentiles(lat)
     print(f"{cfg.name}: {len(futs)} requests over {wall:.1f}s "
@@ -91,6 +107,15 @@ def run_stream(cfg, params, args) -> None:
         print(f"latency p50={pct[50] * 1e3:.1f}ms "
               f"p95={pct[95] * 1e3:.1f}ms p99={pct[99] * 1e3:.1f}ms "
               f"throughput={len(lat) / wall:.2f} req/s")
+    dpct = _percentiles(decode)
+    if dpct:
+        print(f"decode p50={dpct[50] * 1e3:.1f}ms "
+              f"p95={dpct[95] * 1e3:.1f}ms p99={dpct[99] * 1e3:.1f}ms "
+              f"({len(decode)} stamped)")
+    for name, plan in placements.items():
+        print(f"engine {name}: prefill={plan.prefill_group} "
+              f"decode={plan.decode_group} "
+              f"disaggregated={plan.disaggregated}")
     print(sched.stats.row())
 
 
@@ -106,6 +131,9 @@ def main(argv=None):
     ap.add_argument("--stream", action="store_true",
                     help="drive the serving scheduler with a synthetic "
                          "open-loop arrival trace")
+    ap.add_argument("--continuous", action="store_true",
+                    help="--stream via the continuous-batching engine "
+                         "(decode step as the scheduling quantum)")
     ap.add_argument("--rate", type=float, default=4.0,
                     help="--stream mean arrival rate, requests/s")
     ap.add_argument("--duration", type=float, default=5.0,
@@ -134,7 +162,7 @@ def main(argv=None):
     cache_len = args.prompt_len + args.new_tokens + 1
 
     if args.hybrid:
-        from repro.core.cost_model import CostTerms
+        from repro.core.cost_model import lm_decode_terms
         from repro.core.hybrid_executor import HybridExecutor
 
         ex = HybridExecutor(n_chunks=min(4, args.batch))
@@ -154,8 +182,7 @@ def main(argv=None):
         # inside the timed path.
         n_params = sum(int(np.prod(x.shape))
                        for x in jax.tree_util.tree_leaves(params))
-        unit_cost = CostTerms(flops=2.0 * n_params * (args.new_tokens + 1),
-                              bytes=4.0 * n_params, compute="matmul")
+        unit_cost = lm_decode_terms(n_params, args.new_tokens + 1)
         ex.calibrate(lambda g, k: run_share(g, 0, k),
                      probe_units=max(args.batch // 2, 1),
                      workload=f"serve/{cfg.name}", unit_cost=unit_cost)

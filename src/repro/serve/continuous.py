@@ -1,0 +1,521 @@
+"""Iteration-level scheduling engine: the decode step is the quantum.
+
+PR-4/5 serve LM requests as monolithic unpreemptible units, so a
+64-token decode occupies its lane end-to-end while same-shape arrivals
+queue behind it — head-of-line blocking the paper's own lens diagnoses
+as using the wrong scheduling granularity.  This engine makes one
+*decode step* the scheduling quantum instead:
+
+* live requests' rows live in fixed slots of a pow2-sized state pytree,
+  and every step is ONE batched kernel call over all S slots
+  (``serve_step.make_slot_step``'s vmap), so shapes stay jit-stable no
+  matter how many rows are live — dead slots compute garbage that
+  nothing reads, which is what keeps join/evict bit-identical to solo
+  decode (vmap rows are independent);
+* new same-bucket arrivals join the running batch at the next step
+  boundary (their prefill runs on a separate lane, see below) instead
+  of waiting for the batch to drain;
+* finished rows are evicted at the boundary and their outputs demuxed
+  exactly per request.
+
+**Prefill/decode disaggregation** (paper §5.4.3 suitability split):
+compute-bound prefill runs as a dedicated unit on the projected-fastest
+lane while the bandwidth-bound step-loop is co-scheduled on the other
+lane — the Scheduler picks both lanes from ``CostTerms`` priors
+(``cost_model.lm_prefill_terms``/``lm_decode_terms``) scaled by group
+slowdown, so a fresh process places with zero probe runs.
+
+The same mechanism generalizes past LMs: any sequential workload whose
+unit of progress is "one iteration over carried state" (listrank
+pointer-jump rounds, LBM BGK steps, dither rows) gets iteration-
+boundary yield points for free — the step loop releases its lane locks
+between steps, so other lane work interleaves and same-shape requests
+stack into the vmapped state (``IterStepper``).
+
+Steppers are duck-typed; the engine needs::
+
+    workload      str, registry name this engine serves
+    n_slots       int, fixed slot count (pow2 keeps shapes stable)
+    prefill_cost  CostTerms for one request's join work
+    decode_cost   CostTerms for one batched step
+    init_slots()            -> state
+    prefill(spec)           -> [(row_state, first_out, n_steps), ...]
+    insert(state, slot, row_state) -> state
+    step(state)             -> (state, outs)   # outs indexable by slot
+    #                                            or None (state carries)
+    finish(state, slot, first_out, collected) -> row value
+    assemble(row_values)    -> request value (solo-identical order)
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import weakref
+from typing import Callable, Dict, List, Optional
+
+_LIVE: "weakref.WeakSet[ContinuousEngine]" = weakref.WeakSet()
+
+
+def shutdown_all(timeout: float = 10.0) -> None:
+    """Stop every live engine (test teardown safety net)."""
+    for eng in list(_LIVE):
+        eng.shutdown(timeout=timeout)
+
+
+class _Pending:
+    """One submitted request in flight through the engine."""
+
+    __slots__ = ("req", "spec", "t_start", "n_rows", "row_values")
+
+    def __init__(self, req, spec, t_start: float):
+        self.req = req
+        self.spec = spec
+        self.t_start = t_start
+        self.n_rows = 0                      # set once prefill ran
+        self.row_values: Dict[int, object] = {}
+
+
+class _Row:
+    """One live slot-resident row."""
+
+    __slots__ = ("pending", "row_index", "first_out", "remaining",
+                 "collected", "slot")
+
+    def __init__(self, pending: _Pending, row_index: int, first_out,
+                 remaining: int):
+        self.pending = pending
+        self.row_index = row_index
+        self.first_out = first_out
+        self.remaining = int(remaining)
+        self.collected: List[object] = []
+        self.slot = -1
+
+
+class ContinuousEngine:
+    """Step-quantum engine for one (stepper, lane-assignment) pair.
+
+    Two threads: ``serve-cb-<wl>-prefill`` turns submissions into slot
+    rows on the prefill lane; ``serve-cb-<wl>-step`` runs the batched
+    step loop on the decode lane, joining ready rows and evicting
+    finished ones at every step boundary.  Lane locks are acquired
+    per-phase and *released between steps* — that release IS the
+    preemption point: any dedicated/shared work the Scheduler placed on
+    the same lane interleaves at iteration boundaries instead of
+    waiting for a whole request.
+
+    ``resolve(req, value, t_start)`` is the Scheduler's ``_resolve``
+    (keeps the accounting invariant: every submitted request is
+    completed/failed exactly once); ``hooks`` may carry ``on_step``,
+    ``on_join``, ``on_evict`` counters (called outside locks).
+    """
+
+    def __init__(self, stepper, *,
+                 resolve: Callable[[object, object, float], None],
+                 reject: Callable[[object, BaseException], None],
+                 prefill_locks: Optional[List[threading.Lock]] = None,
+                 step_locks: Optional[List[threading.Lock]] = None,
+                 prefill_group: str = "", decode_group: str = "",
+                 prefill_ctx: Optional[Callable] = None,
+                 step_ctx: Optional[Callable] = None,
+                 hooks: Optional[Dict[str, Callable]] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        import time as _time
+        from contextlib import nullcontext
+        self.stepper = stepper
+        self.workload = stepper.workload
+        self.n_slots = int(stepper.n_slots)
+        self.prefill_group = prefill_group
+        self.decode_group = decode_group
+        self.prefill_locks = list(prefill_locks or [])
+        self.step_locks = list(step_locks or [])
+        self._resolve = resolve
+        self._reject = reject
+        self._prefill_ctx = prefill_ctx or (lambda: nullcontext())
+        self._step_ctx = step_ctx or (lambda: nullcontext())
+        self._hooks = dict(hooks or {})
+        self._clock = clock or _time.monotonic
+        self._cv = threading.Condition()
+        self._inbox: collections.deque = collections.deque()
+        self._ready: collections.deque = collections.deque()
+        self._free: List[int] = list(range(self.n_slots))[::-1]
+        self._live: Dict[int, _Row] = {}
+        self._stop = False
+        self.steps = 0
+        self.joins = 0
+        self.evictions = 0
+        self.max_live = 0
+        with self._step_ctx():
+            self._state = stepper.init_slots()
+        self._threads = [
+            threading.Thread(target=self._prefill_loop, daemon=True,
+                             name=f"serve-cb-{_safe(self.workload)}-prefill"),
+            threading.Thread(target=self._step_loop, daemon=True,
+                             name=f"serve-cb-{_safe(self.workload)}-step"),
+        ]
+        for t in self._threads:
+            t.start()
+        _LIVE.add(self)
+
+    # ---- submission ------------------------------------------------------
+    def submit(self, req, spec, t_start: float) -> bool:
+        """Hand one request to the engine (False after shutdown)."""
+        with self._cv:
+            if self._stop:
+                return False
+            self._inbox.append(_Pending(req, spec, t_start))
+            self._cv.notify_all()
+        return True
+
+    # ---- prefill lane ----------------------------------------------------
+    def _prefill_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._inbox and not self._stop:
+                    self._cv.wait()
+                if self._stop and not self._inbox:
+                    return
+                pending = self._inbox.popleft()
+            try:
+                for lk in self.prefill_locks:
+                    lk.acquire()
+                try:
+                    with self._prefill_ctx():
+                        rows = self.stepper.prefill(pending.spec)
+                finally:
+                    for lk in reversed(self.prefill_locks):
+                        lk.release()
+                pending.req.future.meta.setdefault(
+                    "t_first_token", self._clock())
+                pending.req.future.meta.setdefault("engine", {
+                    "prefill_group": self.prefill_group,
+                    "decode_group": self.decode_group})
+                pending.n_rows = len(rows)
+                with self._cv:
+                    for i, (row_state, first_out, n_steps) in enumerate(rows):
+                        row = _Row(pending, i, first_out, n_steps)
+                        self._ready.append((row, row_state))
+                    self._cv.notify_all()
+            except BaseException as exc:          # noqa: BLE001
+                self._reject(pending.req, exc)
+
+    # ---- decode lane -----------------------------------------------------
+    def _step_loop(self) -> None:
+        while True:
+            joined, evicted = [], []
+            with self._cv:
+                while (not self._ready and not self._live
+                       and not self._stop):
+                    self._cv.wait()
+                if self._stop and not self._ready and not self._live:
+                    return
+                # join at the step boundary: fill free slots from ready
+                while self._ready and self._free:
+                    row, row_state = self._ready.popleft()
+                    row.slot = self._free.pop()
+                    self._live[row.slot] = row
+                    joined.append((row, row_state))
+                live_now = dict(self._live)
+                self.max_live = max(self.max_live, len(live_now))
+            if not live_now:
+                continue
+
+            for lk in self.step_locks:
+                lk.acquire()
+            try:
+                with self._step_ctx():
+                    for row, row_state in joined:
+                        self._state = self.stepper.insert(
+                            self._state, row.slot, row_state)
+                        self.joins += 1
+                    self._state, outs = self.stepper.step(self._state)
+                self.steps += 1
+            finally:
+                for lk in reversed(self.step_locks):
+                    lk.release()
+            if joined and "on_join" in self._hooks:
+                self._hooks["on_join"](len(joined))
+            if "on_step" in self._hooks:
+                self._hooks["on_step"](len(live_now))
+
+            for slot, row in live_now.items():
+                if outs is not None:
+                    row.collected.append(outs[slot])
+                row.remaining -= 1
+                if row.remaining <= 0:
+                    evicted.append(row)
+            if not evicted:
+                continue
+            with self._cv:
+                for row in evicted:
+                    del self._live[row.slot]
+                    self._free.append(row.slot)
+                    self.evictions += 1
+                self._cv.notify_all()
+            if "on_evict" in self._hooks:
+                self._hooks["on_evict"](len(evicted))
+            for row in evicted:
+                self._finish_row(row)
+
+    def _finish_row(self, row: _Row) -> None:
+        pending = row.pending
+        try:
+            value = self.stepper.finish(self._state, row.slot,
+                                        row.first_out, row.collected)
+            pending.row_values[row.row_index] = value
+            if len(pending.row_values) < pending.n_rows:
+                return
+            out = self.stepper.assemble(
+                [pending.row_values[i] for i in range(pending.n_rows)])
+            pending.req.future.meta.setdefault("t_last_token", self._clock())
+            self._resolve(pending.req, out, pending.t_start)
+        except BaseException as exc:              # noqa: BLE001
+            self._reject(pending.req, exc)
+
+    # ---- lifecycle -------------------------------------------------------
+    @property
+    def live_rows(self) -> int:
+        with self._cv:
+            return len(self._live)
+
+    def wait_idle(self, timeout: float = 30.0) -> bool:
+        """Block until no work is queued or live (tests/benchmarks)."""
+        deadline = self._clock() + timeout
+        with self._cv:
+            while (self._inbox or self._ready or self._live):
+                remaining = deadline - self._clock()
+                if remaining <= 0:
+                    return False
+                self._cv.wait(remaining)
+        return True
+
+    def shutdown(self, timeout: float = 10.0) -> None:
+        """Finish in-flight rows, then stop both threads."""
+        with self._cv:
+            if self._stop:
+                self._cv.notify_all()
+            self._stop = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout)
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._cv:
+            return {"workload": self.workload, "steps": self.steps,
+                    "joins": self.joins, "evictions": self.evictions,
+                    "max_live": self.max_live, "live": len(self._live),
+                    "prefill_group": self.prefill_group,
+                    "decode_group": self.decode_group}
+
+
+def _safe(name: str) -> str:
+    return name.replace("/", "-").replace("@", "-")
+
+
+# ---------------------------------------------------------------------------
+# Steppers
+# ---------------------------------------------------------------------------
+class LMStepper:
+    """Slot-batched LM decode over ``serve_step.make_slot_step``.
+
+    One row == one prompt row of a request; the slot state is exactly
+    the cache pytree a size-S prefill produces (layer-group axis 0 /
+    batch axis 1 on ``"groups"`` leaves, batch axis 0 on ``"prefix"``),
+    so insert/step are pure index updates and every slot decodes the
+    same math it would decode alone.  ``finish`` rebuilds the solo
+    ``generate`` output: first prefill token + one token per step.
+    """
+
+    def __init__(self, cfg, params, *, prompt_len: int, new_tokens: int,
+                 cache_len: Optional[int] = None, n_slots: int = 4,
+                 tp: int = 1, workload: str = ""):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import cost_model
+        from repro.models import model_zoo
+        from repro.serve.serve_step import make_slot_step
+
+        self._jax, self._jnp = jax, jnp
+        self.cfg = cfg
+        self.params = params
+        self.prompt_len = int(prompt_len)
+        self.new_tokens = int(new_tokens)
+        self.cache_len = int(cache_len or (prompt_len + new_tokens + 1))
+        self.n_slots = int(n_slots)
+        self.workload = workload or f"serve-lm-cb/{cfg.name}"
+        n_params = float(sum(
+            x.size for x in jax.tree.leaves(params)
+            if hasattr(x, "size")))
+        self.n_params = n_params
+        self.prefill_cost = cost_model.lm_prefill_terms(
+            n_params, self.prompt_len)
+        self.decode_cost = cost_model.lm_decode_terms(n_params)
+        self._slot_step = make_slot_step(cfg, tp=tp)
+        L, tp_ = self.cache_len, tp
+
+        @jax.jit
+        def _prefill(params, prompt):
+            logits, caches = model_zoo.prefill(
+                cfg, params, {"tokens": prompt}, cache_len=L, tp=tp_)
+            first = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+            return first.astype(jnp.int32), caches
+
+        self._prefill = _prefill
+
+    # -- protocol ----------------------------------------------------------
+    def init_slots(self):
+        jnp = self._jnp
+        zeros = jnp.zeros((self.n_slots, self.prompt_len), jnp.int32)
+        _, caches = self._prefill(self.params, zeros)
+        return {"caches": caches,
+                "tokens": jnp.zeros((self.n_slots,), jnp.int32),
+                "pos": jnp.zeros((self.n_slots,), jnp.int32)}
+
+    def prefill(self, spec):
+        jax = self._jax
+        prompt = self._jnp.asarray(spec.arrays[0])
+        first, caches = self._prefill(self.params, prompt)
+        first_host = [int(t) for t in jax.device_get(first)]
+        rows = []
+        for b in range(prompt.shape[0]):
+            row_cache = self._slice_cache(caches, b)
+            rows.append(((row_cache, first[b]), first_host[b],
+                         self.new_tokens))
+        return rows
+
+    def insert(self, state, slot, row_state):
+        jax, jnp = self._jax, self._jnp
+        row_cache, first = row_state
+        caches = self._cache_update(state["caches"], row_cache, slot)
+        return {"caches": caches,
+                "tokens": state["tokens"].at[slot].set(
+                    first.astype(jnp.int32)),
+                "pos": state["pos"].at[slot].set(self.prompt_len)}
+
+    def step(self, state):
+        toks, caches = self._slot_step(self.params, state["tokens"],
+                                       state["caches"], state["pos"])
+        new = {"caches": caches, "tokens": toks,
+               "pos": state["pos"] + 1}
+        import numpy as np
+        return new, np.asarray(self._jax.device_get(toks))
+
+    def finish(self, state, slot, first_out, collected):
+        import numpy as np
+        return np.asarray([first_out] + [int(t) for t in collected],
+                          dtype=np.int32)[None, :]
+
+    def assemble(self, row_values):
+        import numpy as np
+        return np.concatenate(row_values, axis=0)
+
+    def warm(self, batch_sizes=(1, 2)) -> None:
+        """Compile the fixed slot shapes (size-S prefill, per-request
+        prefill batches, insert, slot step) ahead of traffic."""
+        jnp = self._jnp
+        state = self.init_slots()
+        for b in batch_sizes:
+            first, caches = self._prefill(
+                self.params,
+                jnp.zeros((int(b), self.prompt_len), jnp.int32))
+            row = self._slice_cache(caches, 0)
+            state = self.insert(state, 0, (row, first[0]))
+        state, _ = self.step(state)
+        self._jax.block_until_ready(state)
+
+    # -- cache pytree plumbing --------------------------------------------
+    def _slice_cache(self, caches, b):
+        jax = self._jax
+        out = {"groups": jax.tree.map(lambda a: a[:, b],
+                                      caches["groups"])}
+        if "prefix" in caches:
+            out["prefix"] = [jax.tree.map(lambda a: a[b], c)
+                             for c in caches["prefix"]]
+        return out
+
+    def _cache_update(self, caches, row, slot):
+        jax = self._jax
+        lax = self._jax.lax
+        out = {"groups": jax.tree.map(
+            lambda full, r: lax.dynamic_update_index_in_dim(
+                full, r, slot, 1),
+            caches["groups"], row["groups"])}
+        if "prefix" in caches:
+            out["prefix"] = [
+                jax.tree.map(lambda full, r: lax.dynamic_update_index_in_dim(
+                    full, r, slot, 0), c, rc)
+                for c, rc in zip(caches["prefix"], row["prefix"])]
+        return out
+
+
+class IterStepper:
+    """Slot-batched iteration for sequential single-unit workloads.
+
+    Wraps one jitted per-row iteration (a pointer-jump round, a BGK
+    step, a dither row) as ``vmap`` over a fixed slot axis: requests
+    whose whole-job adapters were unpreemptible single units become
+    sequences of step-boundary yield points, and same-shape requests
+    stack into the one batched call.  The carried state IS the output:
+    per-step ``outs`` is None and ``finish`` slices the final state at
+    the row's slot.
+
+    ``make_rows(spec) -> [(row_state_pytree, n_steps), ...]`` builds
+    the initial carried state per request row; ``finalize(row_state)``
+    turns a final row state into the request's value (must match the
+    solo adapter bit-for-bit — all three built-ins do, measured).
+    """
+
+    def __init__(self, *, workload: str, n_slots: int, template_row,
+                 iter_fn, make_rows, finalize,
+                 prefill_cost=None, decode_cost=None,
+                 assemble=None):
+        import jax
+
+        from repro.core.cost_model import CostTerms
+
+        self._jax = jax
+        self.workload = workload
+        self.n_slots = int(n_slots)
+        self._template = template_row
+        self._make_rows = make_rows
+        self._finalize = finalize
+        self._assemble = assemble
+        self.prefill_cost = prefill_cost or CostTerms()
+        self.decode_cost = decode_cost or CostTerms()
+        self._step = jax.jit(jax.vmap(iter_fn))
+
+    def init_slots(self):
+        jax, jnp = self._jax, self._jax.numpy
+        return jax.tree.map(
+            lambda a: jnp.zeros((self.n_slots,) + tuple(a.shape), a.dtype),
+            self._template)
+
+    def prefill(self, spec):
+        return [(row_state, None, n_steps)
+                for row_state, n_steps in self._make_rows(spec)]
+
+    def insert(self, state, slot, row_state):
+        jax = self._jax
+        return jax.tree.map(
+            lambda full, r: jax.lax.dynamic_update_index_in_dim(
+                full, r, slot, 0),
+            state, row_state)
+
+    def step(self, state):
+        return self._step(state), None
+
+    def finish(self, state, slot, first_out, collected):
+        jax = self._jax
+        row = jax.tree.map(lambda a: a[slot], state)
+        return self._finalize(jax.device_get(row))
+
+    def assemble(self, row_values):
+        if self._assemble is not None:
+            return self._assemble(row_values)
+        return row_values[0] if len(row_values) == 1 else row_values
+
+    def warm(self) -> None:
+        """Compile insert + the vmapped step ahead of traffic."""
+        state = self.insert(self.init_slots(), 0, self._template)
+        state = self.step(state)[0]
+        self._jax.block_until_ready(state)

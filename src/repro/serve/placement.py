@@ -160,6 +160,55 @@ def plan_placement(n_units: int, groups: List[GroupLoad], now: float,
                              best.queued_behind_s, alternatives=scores)
 
 
+@dataclass(frozen=True)
+class DisaggregationPlan:
+    """Phase-to-lane assignment for a two-phase workload (the paper's
+    §5.4.3 suitability split applied to LM serving): compute-bound
+    prefill on one lane, bandwidth-bound decode on another."""
+    prefill_group: str
+    decode_group: str
+    est_prefill_s: float
+    est_decode_s: float
+    alternatives: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def disaggregated(self) -> bool:
+        return self.prefill_group != self.decode_group
+
+
+def plan_disaggregation(groups: List[GroupLoad],
+                        prefill_times: Dict[str, float],
+                        decode_times: Dict[str, float]
+                        ) -> Optional[DisaggregationPlan]:
+    """Assign prefill and decode lanes from per-group phase estimates.
+
+    Prefill goes to the group with the smallest projected prefill time
+    (it is compute-bound, so this is the fastest-matmul lane); the
+    decode step-loop is co-scheduled on the best *other* lane so new
+    arrivals' prefills never stall the running batch.  With one alive
+    group both phases share it.  Pure function over plain estimates —
+    the scheduler resolves ``prefill_times``/``decode_times`` from
+    ``CostTerms`` priors scaled by group slowdown, so a fresh process
+    places with zero probe runs."""
+    alive = [g for g in groups if g.alive]
+    if not alive:
+        return None
+    inf = float("inf")
+    pre = min(alive, key=lambda g: prefill_times.get(g.name, inf))
+    others = [g for g in alive if g.name != pre.name]
+    dec = (min(others, key=lambda g: decode_times.get(g.name, inf))
+           if others else pre)
+    scores = {f"prefill:{g.name}": prefill_times.get(g.name, inf)
+              for g in alive}
+    scores.update({f"decode:{g.name}": decode_times.get(g.name, inf)
+                   for g in alive})
+    return DisaggregationPlan(
+        pre.name, dec.name,
+        est_prefill_s=prefill_times.get(pre.name, 0.0),
+        est_decode_s=decode_times.get(dec.name, 0.0),
+        alternatives=scores)
+
+
 def deadline_feasible(decision: PlacementDecision, now: float,
                       t_deadline: Optional[float]) -> bool:
     """Admission check: can the chosen placement still make the

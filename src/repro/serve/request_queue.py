@@ -60,6 +60,10 @@ class ServeFuture:
         self._value = None
         self._exc: Optional[BaseException] = None
         self._callbacks: List[Callable[["ServeFuture"], None]] = []
+        # free-form per-request stamps (TTFT, decode span, placement);
+        # written by the executing lane/engine BEFORE the future
+        # resolves, read by clients after — no lock needed
+        self.meta: dict = {}
 
     def done(self) -> bool:
         return self._event.is_set()

@@ -33,6 +33,15 @@ Lee et al. is rediscovered from the scheduler's own traffic, and a
 fresh process inherits it from disk (first scheduled call plans with
 zero probes, PR 3's cold-start contract).
 
+Adapters whose spec carries a ``stepper`` additionally route through
+the **continuous-batching engine** (``serve/continuous.py``): the
+decode step becomes the scheduling quantum, live requests stack into
+one slot-batched kernel call per step, and prefill/decode are
+disaggregated across lanes from ``CostTerms`` priors
+(``placement.plan_disaggregation`` — zero probes on a cold start).
+``REPRO_SERVE_CONTINUOUS=0`` disables the route: stepper specs fall
+back to their monolithic ``run_one`` path.
+
 Lifecycle: ``start()`` (implicit on first submit) → ``drain()`` (stop
 admitting, finish everything accepted, every future resolved exactly
 once) → ``shutdown()`` (drain + join all threads).  Env knobs:
@@ -40,7 +49,8 @@ once) → ``shutdown()`` (drain + join all threads).  Env knobs:
 (batch window, default 2), ``REPRO_SERVE_MAX_BATCH`` (default 8),
 ``REPRO_SERVE_SPAN_FACTOR`` (pins the otherwise self-probed
 cross-lane contention factor), ``REPRO_SERVE_STALE_TAU`` (staleness
-decay time constant for placement estimates, seconds; 0 disables).
+decay time constant for placement estimates, seconds; 0 disables),
+``REPRO_SERVE_CONTINUOUS`` (step-quantum engine on/off, default on).
 """
 from __future__ import annotations
 
@@ -56,8 +66,10 @@ from typing import Callable, Dict, List, Optional, Sequence
 from repro.core.hybrid_executor import (DeviceGroup, HybridExecutor,
                                         detect_platform)
 from repro.core.metrics import ServeStats
+from repro.serve import continuous
 from repro.serve.placement import (SHARED, GroupLoad, PlacementDecision,
-                                   deadline_feasible, plan_placement)
+                                   deadline_feasible, plan_disaggregation,
+                                   plan_placement)
 from repro.serve.request_queue import (Rejection, Request, RequestQueue,
                                        ServeFuture)
 
@@ -75,6 +87,14 @@ def shutdown_all(timeout: float = 10.0) -> None:
             s.shutdown(timeout=timeout, abort=True)
         except Exception:
             pass
+    # engines created outside a scheduler (tests drive them directly)
+    continuous.shutdown_all(timeout=timeout)
+
+
+def continuous_enabled() -> bool:
+    """Step-quantum engine routing on/off (REPRO_SERVE_CONTINUOUS)."""
+    return os.environ.get("REPRO_SERVE_CONTINUOUS", "1").lower() not in (
+        "0", "off", "false", "no")
 
 
 def _env_float(name: str, default: float) -> float:
@@ -264,6 +284,12 @@ class Scheduler:
 
         self._lock = threading.Lock()          # stats + group loads
         self._idle = threading.Condition(self._lock)
+        # continuous-batching engines, one per stepper instance, built
+        # lazily on first routed request (lane assignment recorded in
+        # ``engine_placements`` for observability / cold-start tests)
+        self._engines: Dict[int, continuous.ContinuousEngine] = {}
+        self._engines_lock = threading.Lock()
+        self.engine_placements: Dict[str, object] = {}
         self._loads: Dict[str, GroupLoad] = {
             g.name: GroupLoad(g.name, None) for g in self.groups}
         self._group_locks = {g.name: threading.Lock() for g in self.groups}
@@ -333,6 +359,10 @@ class Scheduler:
             self.drain(timeout)
         with self._lock:
             self._stopped = True
+        with self._engines_lock:
+            engines = list(self._engines.values())
+        for eng in engines:
+            eng.shutdown(timeout=timeout if timeout is not None else 10.0)
         for lane in self._lanes.values():
             lane.put(None)
         # wake the dispatcher (close() already notified; idempotent)
@@ -419,11 +449,15 @@ class Scheduler:
                 # holding a non-matching request hostage to fill this
                 # batch is head-of-line blocking (measured: a 2 ms
                 # linger per cycle serialized dispatch into the p50 at
-                # high arrival rates)
+                # high arrival rates).  Engine-routed (stepper) specs
+                # never linger — the engine batches at step boundaries,
+                # so waiting here only delays their prefill
                 if (len(batch) < self.max_batch
                         and self.batch_window_s > 0
                         and not self._queue.closed
-                        and len(self._queue) == 0):
+                        and len(self._queue) == 0
+                        and not (continuous_enabled() and getattr(
+                            req.payload, "stepper", None) is not None)):
                     time.sleep(self.batch_window_s)
                     batch += self._queue.pop_matching(
                         req.workload, req.bucket,
@@ -444,6 +478,10 @@ class Scheduler:
         self._apply_injection()
         self._step += 1
         specs = [r.payload for r in batch]
+        if (self.policy == "cost" and continuous_enabled()
+                and getattr(specs[0], "stepper", None) is not None):
+            self._dispatch_engine(batch)
+            return
         n_units = sum(max(int(s.total_units), 1) for s in specs)
         now = self.clock()
 
@@ -541,6 +579,97 @@ class Scheduler:
                     queued_behind_s=start - now,
                     alternatives=decision.alternatives)
         return decision
+
+    # -- continuous-batching engine route -------------------------------
+    def _dispatch_engine(self, batch: List[Request]) -> None:
+        """Route stepper-backed requests to their continuous engine:
+        no placement scoring per request (the engine's lanes were
+        chosen once from CostTerms priors), no batching window (rows
+        join the running batch at the next step boundary)."""
+        now = self.clock()
+        try:
+            eng = self._engine_for(batch[0].payload.stepper)
+        except BaseException as e:                 # noqa: BLE001
+            for r in batch:
+                self._engine_reject(r, e)
+            return
+        with self._lock:
+            if len(batch) > 1:
+                self.stats.batches += 1
+                self.stats.batched_requests += len(batch)
+        for r in batch:
+            if not eng.submit(r, r.payload, now):
+                if r.reject(Rejection("shutdown", r.workload,
+                                      detail="engine shut down")):
+                    with self._idle:
+                        self.stats.rejected_shutdown += 1
+                        self._idle.notify_all()
+
+    def _engine_for(self, stepper) -> continuous.ContinuousEngine:
+        key = id(stepper)
+        with self._engines_lock:
+            eng = self._engines.get(key)
+            if eng is not None:
+                return eng
+            plan = self._plan_engine_lanes(stepper)
+            pre_g = next(g for g in self.groups
+                         if g.name == plan.prefill_group)
+            dec_g = next(g for g in self.groups
+                         if g.name == plan.decode_group)
+
+            def on_step(n_live):
+                with self._lock:
+                    self.stats.engine_steps += 1
+
+            def on_join(k):
+                with self._lock:
+                    self.stats.engine_joins += k
+
+            def on_evict(k):
+                with self._lock:
+                    self.stats.engine_evictions += k
+
+            eng = continuous.ContinuousEngine(
+                stepper,
+                resolve=self._resolve,
+                reject=self._engine_reject,
+                prefill_locks=self._lane_locks(plan.prefill_group),
+                step_locks=self._lane_locks(plan.decode_group),
+                prefill_group=plan.prefill_group,
+                decode_group=plan.decode_group,
+                prefill_ctx=lambda: self._device_ctx(pre_g),
+                step_ctx=lambda: self._device_ctx(dec_g),
+                hooks={"on_step": on_step, "on_join": on_join,
+                       "on_evict": on_evict},
+                clock=self.clock)
+            self._engines[key] = eng
+            self.engine_placements[stepper.workload] = plan
+            return eng
+
+    def _plan_engine_lanes(self, stepper):
+        """Phase-to-lane assignment from CostTerms priors only (no
+        probes: a fresh process must place with last_probe_runs == 0).
+        Prefill is compute-bound, decode bandwidth-bound — predict()
+        rates them against the measured backend profile, scaled by
+        each group's slowdown."""
+        from repro.core import cost_model
+        with self._lock:
+            loads = [GroupLoad(ld.name, None, ld.busy_until, ld.alive)
+                     for ld in self._loads.values()]
+        pre = {g.name: cost_model.predict(stepper.prefill_cost) * g.slowdown
+               for g in self.groups}
+        dec = {g.name: cost_model.predict(stepper.decode_cost) * g.slowdown
+               for g in self.groups}
+        plan = plan_disaggregation(loads, pre, dec)
+        if plan is None:
+            raise RuntimeError("no alive device group for engine")
+        return plan
+
+    def _engine_reject(self, req: Request, exc: BaseException) -> None:
+        if req.future._reject(exc):
+            with self._idle:
+                self.stats.failed += 1
+                self._idle.notify_all()
 
     def _unit_time(self, spec, group_name: str) -> Optional[float]:
         """sec/unit estimate for placement: calibration cache first

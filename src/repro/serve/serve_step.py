@@ -47,6 +47,62 @@ def make_serve_step(cfg: ArchConfig, *, tp: int = 1,
     return serve_step
 
 
+def make_slot_step(cfg: ArchConfig, *, tp: int = 1):
+    """Slot-batched decode step for the continuous-batching engine.
+
+    ``slot_step(params, tokens, slot_caches, positions) ->
+    (next_tokens, new_slot_caches)`` where every array carries a leading
+    *slot* axis of fixed size S: ``tokens``/``positions`` are ``(S,)``
+    int32 and ``slot_caches`` is a per-row cache pytree stacked on a new
+    slot axis.  Built as ``vmap`` of the single-request ``serve_step``
+    so each slot decodes exactly the math it would decode alone — rows
+    are independent, which is what makes join/evict bit-identical to
+    solo decode (dead slots compute garbage that nothing reads).
+
+    Cache pytrees are NOT uniformly batched: the ``"groups"`` leaves
+    carry the layer-group scan axis at 0 and the batch axis at 1, while
+    the optional ``"prefix"`` per-layer caches carry batch at 0 — the
+    in/out axes pytree below maps each accordingly.  Per-slot positions
+    let rows sit at different decode depths inside one kernel call.
+    """
+    step = make_serve_step(cfg, tp=tp)
+
+    def _add_b(caches):
+        out = {"groups": jax.tree.map(lambda a: a[:, None],
+                                      caches["groups"])}
+        if "prefix" in caches:
+            out["prefix"] = [jax.tree.map(lambda a: a[None], c)
+                             for c in caches["prefix"]]
+        return out
+
+    def _drop_b(caches):
+        out = {"groups": jax.tree.map(lambda a: a[:, 0],
+                                      caches["groups"])}
+        if "prefix" in caches:
+            out["prefix"] = [jax.tree.map(lambda a: a[0], c)
+                             for c in caches["prefix"]]
+        return out
+
+    def _row(params, tok, cache_row, pos):
+        nxt, new = step(params, tok[None, None], _add_b(cache_row), pos)
+        return nxt[0, 0], _drop_b(new)
+
+    def _axes(caches):
+        axes = {"groups": 1}
+        if "prefix" in caches:
+            axes["prefix"] = 0
+        return axes
+
+    @jax.jit
+    def slot_step(params, tokens, slot_caches, positions):
+        axes = _axes(slot_caches)
+        return jax.vmap(_row, in_axes=(None, 0, axes, 0),
+                        out_axes=(0, axes))(params, tokens, slot_caches,
+                                            positions)
+
+    return slot_step
+
+
 def generate(cfg: ArchConfig, params, prompt: jnp.ndarray, n_new: int,
              *, tp: int = 1, cache_len: Optional[int] = None,
              temperature: float = 0.0, key=None):

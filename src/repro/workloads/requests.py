@@ -34,6 +34,7 @@ the way real repeated traffic would.
 from __future__ import annotations
 
 import functools
+import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Union
 
@@ -58,7 +59,16 @@ class RequestSpec:
     from a list of same-bucket specs (returning ``None`` when this
     particular batch cannot stack, e.g. mismatched shapes inside one
     pow2 bucket — the scheduler then falls back to per-request
-    coalescing)."""
+    coalescing).
+
+    ``stepper`` opts the request into the continuous-batching engine
+    (``repro.serve.continuous``): the decode step/iteration becomes the
+    scheduling quantum, same-bucket requests stack into one slot-
+    batched kernel call per step, and the request is preemptible at
+    every step boundary.  The stepper instance must be SHARED across
+    requests of one workload (the engine is keyed by it); ``run_one``
+    stays the monolithic fallback (``REPRO_SERVE_CONTINUOUS=0``, fifo
+    policy)."""
     workload: str
     total_units: int
     run_one: Callable[[], object]
@@ -72,6 +82,7 @@ class RequestSpec:
     arrays: tuple = ()
     merge: Optional[Callable[[List["RequestSpec"]],
                              Optional["MergedBatch"]]] = None
+    stepper: Optional[object] = None
 
 
 @dataclass(frozen=True)
@@ -112,6 +123,55 @@ def make_request(workload: str, payload: Optional[dict] = None
 # ---------------------------------------------------------------------------
 # conv — regular, compute-bound; units are output rows
 # ---------------------------------------------------------------------------
+def _conv_merge(specs: List[RequestSpec]) -> Optional[MergedBatch]:
+    """Stack same-shape conv requests into ONE vmapped XLA-conv call
+    (``conv2d_batched``); demux returns row i.  Engages only when the
+    members' tuned config resolves to the ``xla_conv`` impl: vmap over
+    that impl is bit-identical per row to the solo path (measured),
+    while the shift-add and Pallas impls reassociate under vmap — a
+    tuned-to-pallas bucket declines and falls back to per-request
+    coalescing (batching is an optimization, never a correctness
+    risk)."""
+    from repro.kernels.conv2d.ops import conv2d_batched, tuned_config
+
+    arrs = [s.arrays for s in specs if len(s.arrays) == 2]
+    if (len(arrs) != len(specs)
+            or len({a[0].shape for a in arrs}) != 1
+            or len({a[1].shape for a in arrs}) != 1):
+        return None                     # pow2 bucket, unequal shapes
+    cfg = tuned_config(arrs[0][0], arrs[0][1])   # memoized per bucket
+    if dict(cfg).get("impl") != "xla_conv":
+        return None
+    n_real = len(arrs)
+    rows = _ceil_pow2(n_real)           # bound jit shape variants
+    imgs = _pad_pow2_rows(jnp.stack([a[0] for a in arrs]), rows)
+    ws = _pad_pow2_rows(jnp.stack([a[1] for a in arrs]), rows)
+    H, W = arrs[0][0].shape
+    K = arrs[0][1].shape[0]
+
+    def run_one():
+        out = conv2d_batched(imgs, ws)
+        out.block_until_ready()
+        return out
+
+    def run_share(group, start, k):
+        out = conv2d_batched(imgs[start:start + k], ws[start:start + k])
+        out.block_until_ready()
+        return out
+
+    base = specs[0]
+    spec = RequestSpec(
+        # row units are whole member convs — a different per-unit cost
+        # than the base spec's output rows, so a distinct calibration key
+        workload=f"{base.workload}@stack", total_units=n_real,
+        run_one=run_one, run_share=run_share,
+        combine=lambda outs: jnp.concatenate(outs, axis=0),
+        unit_cost=CostTerms(flops=2.0 * H * W * K * K,
+                            bytes=4.0 * (2 * H * W + K * K)),
+        bucket=base.bucket)
+    return MergedBatch(spec, lambda value, i: value[i])
+
+
 def _conv_spec(payload: Optional[dict]) -> RequestSpec:
     from repro.kernels.conv2d.ops import conv2d, tuned_config
     from repro.workloads import conv
@@ -144,12 +204,54 @@ def _conv_spec(payload: Optional[dict]) -> RequestSpec:
         combine=lambda outs: jnp.concatenate(outs, axis=0),
         unit_cost=CostTerms(flops=2.0 * W * K * K, bytes=4.0 * 2 * W),
         comm_cost=(K - 1) * W * 4 / 6e9,
-        bucket=f"H{pow2_bucket(H)}_K{K}")
+        bucket=f"H{pow2_bucket(H)}_K{K}",
+        arrays=(img, w), merge=_conv_merge)
 
 
 # ---------------------------------------------------------------------------
 # hist — memory-bound; units are element blocks
 # ---------------------------------------------------------------------------
+def _hist_merge(specs: List[RequestSpec]) -> Optional[MergedBatch]:
+    """Stack same-length histogram payloads into a (R, n) matrix
+    counted row-wise in ONE vmapped bincount call
+    (``histogram_rows``); demux returns row i.  Counts are exact
+    integer sums, so each row is bit-identical to the solo
+    ``histogram`` of that payload regardless of which impl the solo
+    path autotuned to.  Zero-pad rows land every count in bin 0 of a
+    padded row nobody reads."""
+    from repro.kernels.hist.ops import histogram_rows
+
+    xs = [s.arrays[0] for s in specs if s.arrays]
+    if len(xs) != len(specs) or len({x.shape for x in xs}) != 1:
+        return None                     # pow2 bucket, unequal lengths
+    n_bins = int(specs[0].workload.rsplit("x", 1)[1])
+    n_real = len(xs)
+    rows = _ceil_pow2(n_real)           # bound jit shape variants
+    stack = _pad_pow2_rows(jnp.stack(xs), rows)
+    n = int(xs[0].shape[0])
+
+    def run_one():
+        out = histogram_rows(stack, n_bins)
+        out.block_until_ready()
+        return out
+
+    def run_share(group, start, k):
+        out = histogram_rows(stack[start:start + k], n_bins)
+        out.block_until_ready()
+        return out
+
+    base = specs[0]
+    spec = RequestSpec(
+        # row units are whole member histograms, not element blocks —
+        # distinct calibration key
+        workload=f"{base.workload}@stack", total_units=n_real,
+        run_one=run_one, run_share=run_share,
+        combine=lambda outs: jnp.concatenate(outs, axis=0),
+        unit_cost=CostTerms(flops=2.0 * n, bytes=4.0 * (n + n_bins)),
+        bucket=base.bucket)
+    return MergedBatch(spec, lambda value, i: value[i])
+
+
 def _hist_spec(payload: Optional[dict]) -> RequestSpec:
     from repro.kernels.hist.ops import histogram, tuned_config
     from repro.workloads import hist
@@ -185,7 +287,8 @@ def _hist_spec(payload: Optional[dict]) -> RequestSpec:
         combine=lambda outs: sum(outs),
         unit_cost=CostTerms(flops=2.0 * unit, bytes=4.0 * unit),
         comm_cost=n_bins * 4 / 6e9,
-        bucket=f"N{pow2_bucket(n)}_B{n_bins}")
+        bucket=f"N{pow2_bucket(n)}_B{n_bins}",
+        arrays=(x,), merge=_hist_merge)
 
 
 # ---------------------------------------------------------------------------
@@ -617,10 +720,125 @@ def _montecarlo_spec(payload: Optional[dict]) -> RequestSpec:
 
 
 # ---------------------------------------------------------------------------
+# Iteration steppers — the sequential single-unit adapters (listrank /
+# lbm / dither) as continuous-batching citizens: one pointer-jump
+# round / BGK step / dither row is the engine's scheduling quantum, so
+# a request becomes preemptible at every iteration boundary and
+# same-shape requests stack into one vmapped call.  Opt-in via the
+# ``continuous: True`` payload key: monolithic ``run_one`` (one fused
+# while_loop/scan) is faster for a solo request, so solo-latency
+# traffic keeps the old path; the engine wins when several same-shape
+# requests are live or lane time must be shared at fine grain.
+# Steppers are memoized per shape — the engine is keyed by stepper
+# instance, so every same-shape request stacks into one slot state.
+# ---------------------------------------------------------------------------
+def _engine_slots(default: int = 4) -> int:
+    import os
+    try:
+        return max(int(os.environ.get("REPRO_SERVE_SLOTS", default)), 1)
+    except ValueError:
+        return default
+
+
+@functools.lru_cache(maxsize=4)
+def _listrank_stepper(n: int):
+    from repro.serve.continuous import IterStepper
+    from repro.workloads import listrank as lr
+
+    uc = lr.unit_cost_terms(n)
+    steps = max(int(uc.steps), 1)
+
+    def make_rows(spec):
+        succ = spec.arrays[0]
+        rank0 = jnp.where(succ == jnp.arange(n), 0, 1)
+        return [((succ, rank0), steps)]
+
+    return IterStepper(
+        workload=f"serve-listrank/{n}", n_slots=_engine_slots(),
+        template_row=(jnp.zeros((n,), jnp.int32),
+                      jnp.zeros((n,), jnp.int32)),
+        # exactly ceil(log2 n) rounds equal pointer_jump_rank's
+        # while_loop (extra rounds are idempotent: the tail self-loop
+        # fixes succ; measured bit-identical)
+        iter_fn=lambda sr: lr._one_round(sr[0], sr[1]),
+        make_rows=make_rows,
+        finalize=lambda row: np.asarray(row[1]),
+        prefill_cost=CostTerms(flops=2.0 * n, bytes=8.0 * n),
+        decode_cost=CostTerms(flops=uc.flops / steps,
+                              bytes=uc.bytes / steps))
+
+
+@functools.lru_cache(maxsize=4)
+def _lbm_stepper(d: int, n_steps: int):
+    from repro.serve.continuous import IterStepper
+    from repro.workloads import lbm
+
+    uc = lbm.unit_cost_terms(d, n_steps)
+
+    return IterStepper(
+        workload=f"serve-lbm/{d}x{n_steps}", n_slots=_engine_slots(),
+        template_row=jnp.zeros((19, d, d, d), jnp.float32),
+        iter_fn=lbm.step_all,
+        make_rows=lambda spec: [(spec.arrays[0], n_steps)],
+        finalize=lambda row: row,
+        prefill_cost=CostTerms(bytes=19.0 * 4.0 * d ** 3),
+        decode_cost=CostTerms(flops=uc.flops / n_steps,
+                              bytes=uc.bytes / n_steps))
+
+
+@functools.lru_cache(maxsize=4)
+def _dither_stepper(h: int, w: int):
+    import jax
+
+    from repro.serve.continuous import IterStepper
+    from repro.workloads import dither
+
+    def row_iter(state):
+        # one Floyd-Steinberg row: identical col scan + carry update to
+        # fsd_dither's row_step, addressed by a carried row index so
+        # vmapped slots can sit at different rows (measured
+        # bit-identical to the fused two-level scan)
+        img, carry, out, i = state
+        row = jax.lax.dynamic_index_in_dim(img, i, 0, keepdims=False)
+
+        def col_step(err_right, inp):
+            x, be = inp
+            old = x + be + err_right
+            new = jnp.where(old > 127.5, 255.0, 0.0)
+            e = old - new
+            return e * (7 / 16), (new, e)
+
+        _, (orow, errs) = jax.lax.scan(col_step, 0.0, (row, carry))
+        down = errs * (5 / 16)
+        left = jnp.roll(errs * (3 / 16), -1).at[-1].set(0.0)
+        right = jnp.roll(errs * (1 / 16), 1).at[0].set(0.0)
+        out = jax.lax.dynamic_update_index_in_dim(out, orow, i, 0)
+        return img, down + left + right, out, i + 1
+
+    def make_rows(spec):
+        img = spec.arrays[0]
+        state = (img, jnp.zeros((w,), jnp.float32),
+                 jnp.zeros((h, w), jnp.float32), jnp.int32(0))
+        return [(state, h)]
+
+    uc = dither.unit_cost_terms(h, w)
+    return IterStepper(
+        workload=f"serve-dither/{h}x{w}", n_slots=_engine_slots(),
+        template_row=(jnp.zeros((h, w), jnp.float32),
+                      jnp.zeros((w,), jnp.float32),
+                      jnp.zeros((h, w), jnp.float32), jnp.int32(0)),
+        iter_fn=row_iter, make_rows=make_rows,
+        finalize=lambda row: row[2],
+        prefill_cost=CostTerms(bytes=4.0 * h * w),
+        decode_cost=CostTerms(flops=uc.flops / h, bytes=uc.bytes / h))
+
+
+# ---------------------------------------------------------------------------
 # listrank — Wyllie pointer jumping (paper §4.8).  The rounds are
 # sequential, so a request is ONE indivisible unit: placement
 # co-schedules whole rankings across lanes (the hybrid win inside one
 # ranking is the Fig. 5 PRNG pipeline, exercised by run_hybrid).
+# ``continuous: True`` payloads ride the step-quantum engine instead.
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=4)
 def _listrank_inputs(n: int, seed: int):
@@ -649,7 +867,9 @@ def _listrank_spec(payload: Optional[dict]) -> RequestSpec:
         run_share=lambda group, start, k: run_one(),
         combine=lambda outs: outs[0],
         unit_cost=lr.unit_cost_terms(n),
-        bucket=f"N{pow2_bucket(n)}")
+        bucket=f"N{pow2_bucket(n)}",
+        arrays=(succ,),
+        stepper=_listrank_stepper(n) if p.get("continuous") else None)
 
 
 # ---------------------------------------------------------------------------
@@ -716,7 +936,9 @@ def _lbm_spec(payload: Optional[dict]) -> RequestSpec:
         run_share=lambda group, start, k: run_one(),
         combine=lambda outs: outs[0],
         unit_cost=lbm.unit_cost_terms(d, n_steps),
-        bucket=f"D{d}_s{n_steps}")
+        bucket=f"D{d}_s{n_steps}",
+        arrays=(f0,),
+        stepper=_lbm_stepper(d, n_steps) if p.get("continuous") else None)
 
 
 # ---------------------------------------------------------------------------
@@ -750,7 +972,9 @@ def _dither_spec(payload: Optional[dict]) -> RequestSpec:
         run_share=lambda group, start, k: run_one(),
         combine=lambda outs: outs[0],
         unit_cost=dither.unit_cost_terms(h, w),
-        bucket=f"H{pow2_bucket(h)}_W{pow2_bucket(w)}")
+        bucket=f"H{pow2_bucket(h)}_W{pow2_bucket(w)}",
+        arrays=(img,),
+        stepper=_dither_stepper(h, w) if p.get("continuous") else None)
 
 
 # ---------------------------------------------------------------------------
@@ -896,6 +1120,177 @@ def make_lm_adapter(cfg, params, prompt_len: int = 16,
 
     register(wl_name, factory)
     return wl_name
+
+
+def make_continuous_lm_adapter(cfg, params, prompt_len: int = 16,
+                               new_tokens: int = 16,
+                               name: Optional[str] = None,
+                               n_slots: Optional[int] = None,
+                               warm_background: bool = True) -> str:
+    """Register a continuous-batching serve-LM adapter and return its
+    workload name (default ``serve-lm-cb/{arch}``).
+
+    Requests carry a shared :class:`repro.serve.continuous.LMStepper`:
+    the scheduler routes them to ONE iteration-level engine whose
+    scheduling quantum is the decode step — live requests stack into a
+    single slot-batched kernel call per step, new arrivals join at step
+    boundaries, finished rows demux exactly.  ``run_one`` keeps the
+    monolithic solo ``generate`` as the fallback when the engine is
+    disabled (``REPRO_SERVE_CONTINUOUS=0`` or fifo policy), so the
+    workload stays servable either way.  Registration kicks off a
+    background precompile of the stepper's fixed slot shapes (prefill +
+    slot step), so the first request never pays the compile."""
+    from repro.serve.continuous import LMStepper
+    from repro.serve.serve_step import generate
+
+    import jax
+
+    wl_name = name or f"serve-lm-cb/{cfg.name}"
+    cache_len = prompt_len + new_tokens + 1
+    n_params = sum(int(np.prod(x.shape))
+                   for x in jax.tree_util.tree_leaves(params))
+    unit = CostTerms(flops=2.0 * n_params * (new_tokens + 1),
+                     bytes=4.0 * n_params, compute="matmul")
+    stepper = LMStepper(cfg, params, prompt_len=prompt_len,
+                        new_tokens=new_tokens, cache_len=cache_len,
+                        n_slots=n_slots or _engine_slots(),
+                        workload=wl_name)
+
+    def factory(payload: Optional[dict]) -> RequestSpec:
+        p = dict(payload or {})
+        if "prompt" in p:
+            prompt = jnp.asarray(p["prompt"])
+        else:
+            B = int(p.get("batch", 1))
+            prompt = jax.random.randint(
+                jax.random.key(int(p.get("seed", 1))),
+                (B, prompt_len), 0, cfg.vocab_size)
+        B = prompt.shape[0]
+
+        def run_one():
+            out = generate(cfg, params, prompt, new_tokens,
+                           cache_len=cache_len)
+            out.block_until_ready()
+            return out
+
+        return RequestSpec(
+            workload=wl_name, total_units=B,
+            run_one=run_one,
+            run_share=lambda group, start, k: run_one(),
+            combine=lambda outs: outs[0],
+            unit_cost=unit,
+            bucket=f"B{pow2_bucket(B)}_P{prompt_len}_N{new_tokens}",
+            arrays=(prompt,), stepper=stepper)
+
+    register(wl_name, factory)
+    if warm_background:
+        _spawn_precompile(stepper.warm, tag=wl_name)
+    return wl_name
+
+
+# ---------------------------------------------------------------------------
+# Registry-level precompile: merged-stack pow2 shapes + stepper
+# programs, compiled ahead of traffic (optionally in the background at
+# adapter-registration time).  Merged executions run pow2-padded
+# stacks and each padded shape jit-compiles once per (shape, device)
+# — enough to cascade an open-loop backlog when it lands mid-trace.
+# ---------------------------------------------------------------------------
+_PRECOMPILE_THREADS: List[threading.Thread] = []
+_PRECOMPILE_LOCK = threading.Lock()
+
+
+def _spawn_precompile(fn: Callable[[], None], tag: str = "") -> None:
+    """Run ``fn`` on a daemon thread named ``precompile-*`` (NEVER
+    ``serve-*``: test teardown asserts those are all joined) and track
+    it so ``wait_precompiled`` can rendezvous."""
+    def work():
+        try:
+            fn()
+        except Exception:
+            pass  # precompile is best-effort; traffic just compiles lazily
+
+    t = threading.Thread(target=work, daemon=True,
+                         name=f"precompile-{tag or len(_PRECOMPILE_THREADS)}")
+    with _PRECOMPILE_LOCK:
+        _PRECOMPILE_THREADS.append(t)
+    t.start()
+
+
+def wait_precompiled(timeout: Optional[float] = None) -> bool:
+    """Join all background precompile threads; True if all finished."""
+    import time
+
+    deadline = None if timeout is None else time.monotonic() + timeout
+    with _PRECOMPILE_LOCK:
+        threads = list(_PRECOMPILE_THREADS)
+    for t in threads:
+        left = (None if deadline is None
+                else max(deadline - time.monotonic(), 0.0))
+        t.join(timeout=left)
+        if t.is_alive():
+            return False
+    return True
+
+
+def precompile_merged(mix, max_batch: int = 8, background: bool = False,
+                      devices=None) -> None:
+    """Compile the merged-stack pow2 shapes (k in 2, 4, ``max_batch``)
+    and any continuous-engine stepper programs for every workload in
+    ``mix`` (a list of ``(workload, payload)`` pairs), on every device
+    group — scheduler-driven warm bursts can't guarantee lane coverage
+    because placement keeps picking the same idle lane.  Compile time
+    is a property of the process, not of the policy under test.  With
+    ``background=True`` this returns immediately; rendezvous via
+    ``wait_precompiled``."""
+    def work():
+        import contextlib
+
+        import jax
+
+        if devices is not None:
+            devs = list(devices)
+        else:
+            try:
+                from repro.core.hybrid_executor import detect_platform
+                groups, _ = detect_platform()
+                devs = [g.devices[0] for g in groups if g.devices]
+            except Exception:
+                devs = []
+        if not devs:
+            devs = [None]
+        warmed = set()
+        for wl, payload in mix:
+            try:
+                probe = make_request(wl, payload)
+            except Exception:
+                continue
+            stepper = getattr(probe, "stepper", None)
+            if stepper is not None and id(stepper) not in warmed:
+                warmed.add(id(stepper))
+                try:
+                    stepper.warm()
+                except Exception:
+                    pass
+            if getattr(probe, "merge", None) is None:
+                continue
+            for k in (2, 4, max_batch):
+                try:
+                    merged = probe.merge(
+                        [make_request(wl, payload) for _ in range(k)])
+                except Exception:
+                    continue
+                if merged is None:
+                    continue
+                for dev in devs:
+                    ctx = (jax.default_device(dev) if dev is not None
+                           else contextlib.nullcontext())
+                    with ctx:
+                        merged.spec.run_one()
+
+    if background:
+        _spawn_precompile(work, tag="merged")
+    else:
+        work()
 
 
 def _ensure_defaults() -> None:

@@ -1,0 +1,314 @@
+"""Continuous batching: iteration-level scheduling engine (PR 6).
+
+Covers the tentpole guarantees: join-at-step-boundary and eviction
+demux are bit-identical to solo decode; iteration-boundary yield
+points make the sequential adapters preemptible and cross-request
+stackable; accounting stays exact under step-quantum dispatch; a
+fresh process places the engine's lanes with zero probe runs; and
+the hist/conv merge hooks stack same-bucket requests exactly.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.hybrid_executor import DeviceGroup
+from repro.models import model_zoo, param
+from repro.serve.scheduler import Scheduler
+from repro.serve.serve_step import generate
+from repro.workloads import requests as adapters
+
+PROMPT_LEN, NEW_TOKENS = 8, 6
+
+
+@pytest.fixture(scope="module")
+def lm():
+    """One reduced arch + registered continuous adapter per module:
+    the stepper is shared state (that is the point — every request of
+    the workload stacks into one engine)."""
+    import jax
+
+    cfg = registry.get("minicpm3-4b").reduced()
+    params = param.values(model_zoo.init(cfg, jax.random.key(0)))
+    wl = adapters.make_continuous_lm_adapter(
+        cfg, params, prompt_len=PROMPT_LEN, new_tokens=NEW_TOKENS,
+        name="serve-lm-cb/test")
+    assert adapters.wait_precompiled(timeout=300)
+    return cfg, params, wl
+
+
+def _solo(cfg, params, prompt):
+    out = generate(cfg, params, prompt, NEW_TOKENS,
+                   cache_len=PROMPT_LEN + NEW_TOKENS + 1)
+    return np.asarray(out)
+
+
+def _two_groups():
+    return [DeviceGroup("accel", [], "accel"),
+            DeviceGroup("host", [], "host")]
+
+
+# ---------------------------------------------------------------------------
+# tentpole: join / evict bit-identity vs solo decode
+# ---------------------------------------------------------------------------
+def test_lm_engine_join_evict_bit_identical(lm):
+    """A burst of same-bucket LM requests stacks into one slot-batched
+    step loop; every demuxed output must equal its solo generate()
+    bit-for-bit, and the step count must show actual stacking (fewer
+    batched steps than total row-steps)."""
+    cfg, params, wl = lm
+    sched = Scheduler(groups=_two_groups())
+    futs = [sched.submit(wl, {"batch": 1, "seed": s}) for s in range(5)]
+    outs = [np.asarray(f.result(timeout=300)) for f in futs]
+    snap = sched.stats.snapshot()
+    sched.shutdown()
+    for s, out in enumerate(outs):
+        spec = adapters.make_request(wl, {"batch": 1, "seed": s})
+        np.testing.assert_array_equal(out, _solo(cfg, params,
+                                                 spec.arrays[0]))
+    assert snap["engine_joins"] == 5
+    assert snap["engine_evictions"] == 5
+    # 5 rows x 6 steps = 30 row-steps; stacking must beat one-at-a-time
+    assert 0 < snap["engine_steps"] < 5 * NEW_TOKENS
+
+
+def test_lm_engine_multirow_request_demux(lm):
+    """A batch-3 request spreads over three slots; assemble must
+    restore row order exactly."""
+    cfg, params, wl = lm
+    sched = Scheduler(groups=_two_groups())
+    out = np.asarray(sched.submit(wl, {"batch": 3, "seed": 9})
+                     .result(timeout=300))
+    sched.shutdown()
+    spec = adapters.make_request(wl, {"batch": 3, "seed": 9})
+    np.testing.assert_array_equal(out, _solo(cfg, params, spec.arrays[0]))
+
+
+def test_lm_engine_disabled_falls_back_to_monolithic(lm, monkeypatch):
+    """REPRO_SERVE_CONTINUOUS=0 must route the same workload through
+    the monolithic run_one path — same results, no engine."""
+    monkeypatch.setenv("REPRO_SERVE_CONTINUOUS", "0")
+    cfg, params, wl = lm
+    sched = Scheduler(groups=_two_groups())
+    out = np.asarray(sched.submit(wl, {"batch": 1, "seed": 4})
+                     .result(timeout=300))
+    snap = sched.stats.snapshot()
+    sched.shutdown()
+    spec = adapters.make_request(wl, {"batch": 1, "seed": 4})
+    np.testing.assert_array_equal(out, _solo(cfg, params, spec.arrays[0]))
+    assert snap["engine_steps"] == 0 and not sched.engine_placements
+
+
+# ---------------------------------------------------------------------------
+# tentpole: disaggregated cold-start placement, zero probes
+# ---------------------------------------------------------------------------
+def test_cold_start_places_engine_with_zero_probes(lm):
+    """A fresh scheduler must pick the prefill and decode lanes purely
+    from the CostTerms priors — no probe may run."""
+    _, _, wl = lm
+    sched = Scheduler(groups=_two_groups())
+    sched.submit(wl, {"batch": 1, "seed": 2}).result(timeout=300)
+    snap = sched.stats.snapshot()
+    plan = sched.engine_placements.get(wl)
+    sched.shutdown()
+    assert snap["probe_runs"] == 0
+    assert plan is not None
+    assert plan.prefill_group in ("accel", "host")
+    assert plan.decode_group in ("accel", "host")
+    assert plan.est_prefill_s > 0 and plan.est_decode_s > 0
+
+
+# ---------------------------------------------------------------------------
+# tentpole: iterative adapters become preemptible + stackable
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("wl,payload,solo", [
+    ("listrank", {"n": 1 << 10, "seed": 3, "continuous": True},
+     lambda: __import__("repro.workloads.listrank", fromlist=["x"])
+     .pointer_jump_rank(adapters._listrank_inputs(1 << 10, 3))),
+    ("lbm", {"d": 8, "n_steps": 3, "seed": 1, "continuous": True},
+     lambda: _lbm_solo(8, 3, 1)),
+    ("dither", {"h": 32, "w": 32, "seed": 2, "continuous": True},
+     lambda: __import__("repro.workloads.dither", fromlist=["x"])
+     .fsd_dither(adapters._dither_inputs(32, 32, 2))),
+])
+def test_iterative_engine_bit_identical(wl, payload, solo):
+    sched = Scheduler(groups=_two_groups())
+    out = np.asarray(sched.submit(wl, payload).result(timeout=300))
+    sched.shutdown()
+    np.testing.assert_array_equal(out, np.asarray(solo()))
+
+
+def _lbm_solo(d, n_steps, seed):
+    from repro.workloads import lbm
+
+    cur = adapters._lbm_state(d, seed)
+    for _ in range(n_steps):
+        cur = lbm.step_all(cur)
+    return cur
+
+
+def test_iterative_requests_stack_cross_request():
+    """Two live lbm requests must share the vmapped slot state
+    (max_live == 2) and still both match the sequential solo run."""
+    sched = Scheduler(groups=_two_groups())
+    n_steps = 48
+    futs = [sched.submit("lbm", {"d": 8, "n_steps": n_steps, "seed": s,
+                                 "continuous": True})
+            for s in (1, 2)]
+    outs = [np.asarray(f.result(timeout=300)) for f in futs]
+    eng = next(iter(sched._engines.values()))
+    snap = eng.snapshot()
+    sched.shutdown()
+    for s, out in zip((1, 2), outs):
+        np.testing.assert_array_equal(out,
+                                      np.asarray(_lbm_solo(8, n_steps, s)))
+    assert snap["max_live"] == 2
+    assert snap["evictions"] == 2
+    # stacked: strictly fewer batched steps than sequential row-steps
+    assert snap["steps"] < 2 * n_steps
+
+
+def test_step_loop_preempts_at_iteration_boundaries():
+    """The step loop releases its lane locks between steps; holding
+    those locks from outside must stall it mid-request (at a step
+    boundary, not mid-kernel) and releasing must let it finish."""
+    sched = Scheduler(groups=_two_groups())
+    fut = sched.submit("lbm", {"d": 8, "n_steps": 120, "seed": 5,
+                               "continuous": True})
+    deadline = time.monotonic() + 60
+    while not sched._engines and time.monotonic() < deadline:
+        time.sleep(0.005)
+    eng = next(iter(sched._engines.values()))
+    while eng.steps < 3 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert eng.steps >= 3, "engine never started stepping"
+
+    for lk in eng.step_locks:           # preempt: take the decode lane
+        lk.acquire()
+    try:
+        s0 = eng.steps
+        time.sleep(0.2)
+        # at most one in-flight step finishes; the loop then blocks
+        assert eng.steps <= s0 + 1
+        assert not fut.done()
+    finally:
+        for lk in reversed(eng.step_locks):
+            lk.release()
+
+    out = np.asarray(fut.result(timeout=300))
+    sched.shutdown()
+    np.testing.assert_array_equal(out, np.asarray(_lbm_solo(8, 120, 5)))
+
+
+# ---------------------------------------------------------------------------
+# accounting under step-quantum dispatch
+# ---------------------------------------------------------------------------
+def test_accounting_invariant_under_step_quantum(lm):
+    """submitted == completed + failed + rejected + shed + in-flight at
+    every observation point, and in-flight drains to zero."""
+    _, _, wl = lm
+    sched = Scheduler(groups=_two_groups())
+    futs = [sched.submit(wl, {"batch": 1, "seed": s}) for s in range(4)]
+    futs.append(sched.submit("listrank", {"n": 1 << 10, "seed": 0,
+                                          "continuous": True}))
+    futs.append(sched.submit("dither", {"h": 32, "w": 32, "seed": 1,
+                                        "continuous": True}))
+    st = sched.stats
+    assert st.submitted == (st.completed + st.failed + st.rejected_full
+                            + st.rejected_shutdown + st.shed_deadline
+                            + st.in_flight)
+    for f in futs:
+        f.result(timeout=300)
+    deadline = time.monotonic() + 30
+    while st.in_flight and time.monotonic() < deadline:
+        time.sleep(0.01)
+    sched.shutdown()
+    assert st.submitted == 6 == st.completed
+    assert st.in_flight == 0
+
+
+def test_engine_shutdown_finishes_in_flight(lm):
+    """shutdown() must resolve every submitted future (finished or
+    structured-rejected), never orphan one."""
+    from repro.serve.request_queue import RequestRejected
+
+    _, _, wl = lm
+    sched = Scheduler(groups=_two_groups())
+    futs = [sched.submit(wl, {"batch": 1, "seed": s}) for s in range(3)]
+    sched.shutdown()                     # immediately, mid-decode
+    for f in futs:
+        try:
+            f.result(timeout=300)        # resolved, not hung
+        except RequestRejected:
+            pass                         # structured shutdown rejection
+    assert sched.stats.in_flight == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: hist / conv merge hooks (array-level batching)
+# ---------------------------------------------------------------------------
+def test_hist_merge_demux_bit_identical():
+    specs = [adapters.make_request("hist", {"n": 1 << 12, "n_bins": 64,
+                                            "seed": s}) for s in range(3)]
+    merged = specs[0].merge(specs)
+    assert merged is not None
+    assert merged.spec.total_units == 3          # real rows, not pads
+    assert merged.spec.workload.endswith("@stack")
+    batched = merged.spec.run_one()
+    for i, s in enumerate(specs):
+        np.testing.assert_array_equal(np.asarray(merged.demux(batched, i)),
+                                      np.asarray(s.run_one()))
+
+
+def test_hist_merge_refuses_unequal_lengths():
+    a = adapters.make_request("hist", {"n": 1 << 12, "seed": 0})
+    b = adapters.make_request("hist", {"n": (1 << 12) - 8, "seed": 1})
+    assert a.merge([a, b]) is None
+
+
+def test_conv_merge_demux_bit_identical():
+    # REPRO_AUTOTUNE=0 in conftest -> tuned config is xla_conv -> the
+    # merge hook engages (it declines for vmap-unsafe impls)
+    specs = [adapters.make_request("conv", {"size": 64, "ksize": 5,
+                                            "seed": s}) for s in range(3)]
+    merged = specs[0].merge(specs)
+    assert merged is not None
+    assert merged.spec.total_units == 3
+    batched = merged.spec.run_one()
+    for i, s in enumerate(specs):
+        np.testing.assert_array_equal(np.asarray(merged.demux(batched, i)),
+                                      np.asarray(s.run_one()))
+
+
+def test_scheduler_coalesces_hist_burst_exactly():
+    """Same-bucket hist burst through the scheduler: merged execution,
+    per-request results identical to solo."""
+    sched = Scheduler(groups=_two_groups(), max_batch=8,
+                      batch_window_s=0.05, split_overhead_s=100.0,
+                      shared_span_factor=1.0)
+    payloads = [{"n": 1 << 12, "n_bins": 64, "seed": s} for s in range(4)]
+    futs = [sched.submit("hist", p) for p in payloads]
+    vals = [np.asarray(f.result(timeout=120)) for f in futs]
+    merged = sched.stats.merged_batches
+    sched.shutdown()
+    for p, v in zip(payloads, vals):
+        solo = adapters.make_request("hist", p)
+        np.testing.assert_array_equal(v, np.asarray(solo.run_one()))
+    assert merged >= 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: registry-level background precompile
+# ---------------------------------------------------------------------------
+def test_precompile_merged_runs_in_background():
+    mix = [("hist", {"n": 1 << 12, "n_bins": 64, "seed": 0}),
+           ("conv", {"size": 64, "ksize": 5, "seed": 0})]
+    adapters.precompile_merged(mix, max_batch=4, background=True)
+    assert adapters.wait_precompiled(timeout=300)
+    # precompile threads are named precompile-* (teardown asserts no
+    # serve-* thread survives; these must not trip that)
+    for t in threading.enumerate():
+        assert not (t.name.startswith("serve-")
+                    and "precompile" in t.name)

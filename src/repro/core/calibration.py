@@ -365,6 +365,28 @@ class CalibrationCache:
                          >= self.FLUSH_INTERVAL_S):
                 self._flush_locked()
 
+    def mark_group_stale(self, group: str,
+                         age_s: Optional[float] = None) -> None:
+        """Age every entry of ``group`` as if it were observed
+        ``age_s`` seconds earlier (default: fully stale, epoch-old).
+
+        The serving scheduler calls this on lane death: whatever the
+        lane measured before it died says nothing about the lane that
+        comes back (a wedged kernel, a thermal event, a recovered
+        process all change its throughput), so on revival
+        ``get_decayed`` shrinks the old numbers toward the surviving
+        lanes' mean and the rejoin traffic re-measures from scratch.
+        Entries also drop ``in_process`` so the executor re-warms —
+        same contract as a disk-loaded entry."""
+        with self._lock:
+            self._load_disk()
+            for k, e in self._store.items():
+                if k[1] != group:
+                    continue
+                e.t_obs = 0.0 if age_s is None else e.t_obs - age_s
+                e.in_process = False
+                self._dirty = True
+
     def sticky_plan(self, workload: str, total_units: int,
                     chunk_units: int, assigned: Sequence[int]
                     ) -> List[int]:

@@ -14,8 +14,9 @@ request dropped *without* a structured rejection is a bug, not load).
 from __future__ import annotations
 
 import threading
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 
 class EWMA:
@@ -46,6 +47,33 @@ class EWMA:
             return self._n
 
 
+class Percentile:
+    """Thread-safe ring buffer of recent observations with quantile
+    reads.  EWMAs hide the tail; hedging keys off p99 service time, so
+    the scheduler keeps the last ``maxlen`` raw samples instead."""
+
+    def __init__(self, maxlen: int = 256):
+        self._buf: deque = deque(maxlen=maxlen)
+        self._lock = threading.Lock()
+
+    def observe(self, x: float) -> None:
+        with self._lock:
+            self._buf.append(x)
+
+    def quantile(self, q: float) -> Optional[float]:
+        with self._lock:
+            if not self._buf:
+                return None
+            vals = sorted(self._buf)
+        q = min(max(q, 0.0), 1.0)
+        return vals[int(q * (len(vals) - 1))]
+
+    @property
+    def n(self) -> int:
+        with self._lock:
+            return len(self._buf)
+
+
 @dataclass
 class ServeStats:
     """Scheduler load telemetry.  Counters are written under the
@@ -55,7 +83,10 @@ class ServeStats:
     failed: int = 0                  # execution raised; future rejected
     rejected_full: int = 0           # queue_full admission rejections
     rejected_shutdown: int = 0
+    rejected_failure: int = 0        # lane failure + retry budget spent,
+    #                                  or no alive lane to place on
     shed_deadline: int = 0           # expired or unmeetable deadlines
+    shed_brownout: int = 0           # best-effort shed while degraded
     batches: int = 0                 # coalesced executions (>=2 requests)
     batched_requests: int = 0        # requests that rode in a batch
     merged_batches: int = 0          # batches stacked into ONE kernel
@@ -67,23 +98,38 @@ class ServeStats:
     engine_joins: int = 0            # rows joined a running batch at a
     #                                  step boundary (continuous batching)
     engine_evictions: int = 0        # finished rows evicted from slots
+    engine_cancellations: int = 0    # rows dropped at a step boundary
+    #                                  because their future already
+    #                                  resolved (hedge loser / shutdown)
+    retries: int = 0                 # requests requeued after lane fault
+    hedges: int = 0                  # duplicate executions launched
+    hedge_wins: int = 0              # hedge resolved before the original
+    failovers: int = 0               # lane deaths that triggered requeue
+    watchdog_timeouts: int = 0       # executions past k*est_span/floor
+    lane_deaths: int = 0             # alive -> dead transitions
+    lane_revivals: int = 0           # dead -> alive (rejoin) transitions
     queue_depth: EWMA = field(default_factory=EWMA)
     wait_s: EWMA = field(default_factory=EWMA)       # submit -> start
     service_s: EWMA = field(default_factory=EWMA)    # start -> resolve
     latency_s: EWMA = field(default_factory=EWMA)    # submit -> resolve
+    service_q: Percentile = field(default_factory=Percentile)
+    #                                  raw service-time tail (hedge p99)
 
     @property
     def in_flight(self) -> int:
         return (self.submitted - self.completed - self.failed
                 - self.rejected_full - self.rejected_shutdown
-                - self.shed_deadline)
+                - self.rejected_failure - self.shed_deadline
+                - self.shed_brownout)
 
     def snapshot(self) -> Dict[str, float]:
         return {
             "submitted": self.submitted, "completed": self.completed,
             "failed": self.failed, "rejected_full": self.rejected_full,
             "rejected_shutdown": self.rejected_shutdown,
+            "rejected_failure": self.rejected_failure,
             "shed_deadline": self.shed_deadline,
+            "shed_brownout": self.shed_brownout,
             "batches": self.batches,
             "batched_requests": self.batched_requests,
             "merged_batches": self.merged_batches,
@@ -92,6 +138,14 @@ class ServeStats:
             "engine_steps": self.engine_steps,
             "engine_joins": self.engine_joins,
             "engine_evictions": self.engine_evictions,
+            "engine_cancellations": self.engine_cancellations,
+            "retries": self.retries,
+            "hedges": self.hedges,
+            "hedge_wins": self.hedge_wins,
+            "failovers": self.failovers,
+            "watchdog_timeouts": self.watchdog_timeouts,
+            "lane_deaths": self.lane_deaths,
+            "lane_revivals": self.lane_revivals,
             "in_flight": self.in_flight,
             "queue_depth_ewma": self.queue_depth.value,
             "wait_ewma_s": self.wait_s.value,
@@ -102,8 +156,9 @@ class ServeStats:
     def row(self) -> str:
         return (f"serve: submitted={self.submitted} "
                 f"completed={self.completed} failed={self.failed} "
-                f"rejected={self.rejected_full + self.rejected_shutdown} "
-                f"shed={self.shed_deadline} batches={self.batches} "
+                f"rejected={self.rejected_full + self.rejected_shutdown + self.rejected_failure} "
+                f"shed={self.shed_deadline + self.shed_brownout} "
+                f"retries={self.retries} batches={self.batches} "
                 f"dedicated={self.dedicated} shared={self.shared} "
                 f"depth~{self.queue_depth.value:.1f} "
                 f"latency~{self.latency_s.value * 1e3:.1f}ms")

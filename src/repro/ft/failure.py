@@ -4,12 +4,29 @@ Real deployments detect dead slices via missed heartbeats; tests and the
 examples inject failures deterministically.  The trainer reacts the same
 way to both: mark the group dead, re-plan work shares (elastic), restore
 from the last checkpoint if the failed group held non-replicated state.
+
+The serving scheduler consumes the same primitives at lane granularity:
+idle lane workers beat through ``HeartbeatMonitor``, the watchdog thread
+converts exceeded execution deadlines into failovers, and
+``ChaosInjector`` scripts *time-based* lane faults (kill, hang-for-T,
+slowdown-by-X, flaky-with-probability-p) over a request trace — the
+scenario harness behind the availability rows in
+``benchmarks/serving_bench.py``.
 """
 from __future__ import annotations
 
+import random
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Set
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+
+class LaneFailure(RuntimeError):
+    """An execution failed because its lane did, not because the request
+    was bad.  The scheduler retries these (adapters are pure, so a
+    duplicate execution is safe); any other exception still fails the
+    request's future — application errors must not burn retry budget."""
 
 
 class HeartbeatMonitor:
@@ -45,3 +62,120 @@ class FailureInjector:
 
     def at_step(self, step: int):
         return self.kill.get(step), self.revive.get(step)
+
+
+@dataclass(frozen=True)
+class LaneFault:
+    """One scripted lane fault, at ``t`` seconds after ``arm()``.
+
+    kind:
+      ``kill``   — lane dies at ``t`` (until a later ``revive``);
+                   executions attempted on it raise ``LaneFailure``.
+      ``revive`` — lane comes back at ``t`` (elastic rejoin).
+      ``hang``   — executions starting in ``[t, t+duration_s]`` stall
+                   ``duration_s`` before running (watchdog territory).
+      ``slow``   — executions in the window take ``factor`` x as long
+                   (feeds slowed times into calibration, so survivors'
+                   projections recalibrate).
+      ``flaky``  — executions in the window raise ``LaneFailure`` with
+                   probability ``p`` (retry-budget territory).
+    """
+    t: float
+    lane: str
+    kind: str
+    duration_s: float = 0.0
+    factor: float = 1.0
+    p: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("kill", "revive", "hang", "slow", "flaky"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+class ChaosInjector:
+    """Time-based scripted lane faults for the serving scheduler.
+
+    Where ``FailureInjector`` is indexed by dispatch step (fine for
+    lockstep training), a serving trace is asynchronous — faults land at
+    wall-clock offsets from ``arm()`` (called when trace replay starts;
+    lazily armed on first use otherwise).  The scheduler polls
+    ``at_time`` for lane-state transitions (kill/revive, each delivered
+    exactly once) and asks ``exec_fault`` at execution start for the
+    active execution-level fault on a lane, if any.
+
+    Deterministic given the same timeline: flaky draws use a seeded RNG.
+    """
+
+    def __init__(self, faults: Sequence[LaneFault],
+                 clock: Callable[[], float] = time.monotonic,
+                 seed: int = 0):
+        self.faults: List[LaneFault] = sorted(faults, key=lambda f: f.t)
+        self.clock = clock
+        self._rng = random.Random(seed)
+        self._t0: Optional[float] = None
+        self._emitted: Set[int] = set()
+        self._lock = threading.Lock()
+
+    def arm(self, t0: Optional[float] = None) -> None:
+        """Start the fault clock (idempotent)."""
+        with self._lock:
+            if self._t0 is None:
+                self._t0 = self.clock() if t0 is None else t0
+
+    def _elapsed(self) -> float:
+        with self._lock:
+            if self._t0 is None:
+                self._t0 = self.clock()
+            return self.clock() - self._t0
+
+    def at_step(self, step: int):
+        """Step-schedule compat no-op (faults here are time-based)."""
+        return None, None
+
+    def at_time(self, now: Optional[float] = None
+                ) -> Tuple[List[str], List[str]]:
+        """(lanes newly killed, lanes newly revived) since the last
+        call.  Each scripted kill/revive is emitted exactly once."""
+        del now  # the armed clock is authoritative
+        e = self._elapsed()
+        kills: List[str] = []
+        revives: List[str] = []
+        with self._lock:
+            for i, f in enumerate(self.faults):
+                if f.t > e or i in self._emitted:
+                    continue
+                if f.kind == "kill":
+                    self._emitted.add(i)
+                    kills.append(f.lane)
+                elif f.kind == "revive":
+                    self._emitted.add(i)
+                    revives.append(f.lane)
+        return kills, revives
+
+    def exec_fault(self, lane: str,
+                   now: Optional[float] = None) -> Optional[LaneFault]:
+        """The execution-level fault active on ``lane`` right now, or
+        None.  A kill is active from its ``t`` until the lane's next
+        scripted revive; hang/slow windows are ``[t, t+duration_s]``;
+        flaky windows draw ``p`` per call."""
+        del now
+        e = self._elapsed()
+        killed = False
+        for f in self.faults:
+            if f.lane != lane or f.t > e:
+                continue
+            if f.kind == "kill":
+                killed = True
+            elif f.kind == "revive":
+                killed = False
+        if killed:
+            return LaneFault(t=e, lane=lane, kind="kill")
+        for f in self.faults:
+            if (f.lane == lane and f.kind in ("hang", "slow", "flaky")
+                    and f.t <= e <= f.t + f.duration_s):
+                if f.kind == "flaky":
+                    with self._lock:
+                        hit = self._rng.random() < f.p
+                    return f if hit else None
+                return f
+        return None

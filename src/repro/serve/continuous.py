@@ -106,7 +106,14 @@ class ContinuousEngine:
     ``resolve(req, value, t_start)`` is the Scheduler's ``_resolve``
     (keeps the accounting invariant: every submitted request is
     completed/failed exactly once); ``hooks`` may carry ``on_step``,
-    ``on_join``, ``on_evict`` counters (called outside locks).
+    ``on_join``, ``on_evict``, ``on_cancel`` counters (called outside
+    locks).
+
+    A row whose request future is already resolved — a hedge duplicate
+    won the race, or the scheduler rejected it at shutdown — is dropped
+    at the next step boundary without finishing: joins skip it, live
+    slots free it.  That is the PR-6 preemption point doing cancellation
+    duty; at most one extra step is ever spent on a loser.
     """
 
     def __init__(self, stepper, *,
@@ -143,6 +150,7 @@ class ContinuousEngine:
         self.steps = 0
         self.joins = 0
         self.evictions = 0
+        self.cancellations = 0
         self.max_live = 0
         with self._step_ctx():
             self._state = stepper.init_slots()
@@ -201,7 +209,7 @@ class ContinuousEngine:
     # ---- decode lane -----------------------------------------------------
     def _step_loop(self) -> None:
         while True:
-            joined, evicted = [], []
+            joined, evicted, cancelled = [], [], []
             with self._cv:
                 while (not self._ready and not self._live
                        and not self._stop):
@@ -211,11 +219,22 @@ class ContinuousEngine:
                 # join at the step boundary: fill free slots from ready
                 while self._ready and self._free:
                     row, row_state = self._ready.popleft()
+                    if row.pending.req.future.done():
+                        # already resolved elsewhere (hedge winner,
+                        # shutdown rejection): never takes a slot
+                        self.cancellations += 1
+                        cancelled.append(row)
+                        continue
                     row.slot = self._free.pop()
                     self._live[row.slot] = row
                     joined.append((row, row_state))
                 live_now = dict(self._live)
                 self.max_live = max(self.max_live, len(live_now))
+                if cancelled:
+                    self._cv.notify_all()
+            if cancelled and "on_cancel" in self._hooks:
+                self._hooks["on_cancel"](len(cancelled))
+            cancelled = []
             if not live_now:
                 continue
 
@@ -238,21 +257,33 @@ class ContinuousEngine:
                 self._hooks["on_step"](len(live_now))
 
             for slot, row in live_now.items():
+                if row.pending.req.future.done():
+                    # hedge loser / cancelled mid-decode: free the slot
+                    # at this boundary, skip finish (resolve-exactly-
+                    # once makes the duplicate's value the only value)
+                    cancelled.append(row)
+                    continue
                 if outs is not None:
                     row.collected.append(outs[slot])
                 row.remaining -= 1
                 if row.remaining <= 0:
                     evicted.append(row)
-            if not evicted:
+            if not evicted and not cancelled:
                 continue
             with self._cv:
                 for row in evicted:
                     del self._live[row.slot]
                     self._free.append(row.slot)
                     self.evictions += 1
+                for row in cancelled:
+                    del self._live[row.slot]
+                    self._free.append(row.slot)
+                    self.cancellations += 1
                 self._cv.notify_all()
-            if "on_evict" in self._hooks:
+            if evicted and "on_evict" in self._hooks:
                 self._hooks["on_evict"](len(evicted))
+            if cancelled and "on_cancel" in self._hooks:
+                self._hooks["on_cancel"](len(cancelled))
             for row in evicted:
                 self._finish_row(row)
 
@@ -302,6 +333,7 @@ class ContinuousEngine:
         with self._cv:
             return {"workload": self.workload, "steps": self.steps,
                     "joins": self.joins, "evictions": self.evictions,
+                    "cancellations": self.cancellations,
                     "max_live": self.max_live, "live": len(self._live),
                     "prefill_group": self.prefill_group,
                     "decode_group": self.decode_group}

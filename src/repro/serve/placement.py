@@ -209,6 +209,19 @@ def plan_disaggregation(groups: List[GroupLoad],
         alternatives=scores)
 
 
+def degraded_fraction(groups: List[GroupLoad]) -> float:
+    """Fraction of lanes currently dead — the brownout intensity
+    signal.  0.0 is a healthy fleet; anything above it switches the
+    scheduler's admission to degraded mode (shed best-effort work
+    first, stop lingering for batch coalescing) so a lane death
+    degrades service smoothly instead of collapsing the queue.  Pure
+    function so degradation policy is testable without threads."""
+    if not groups:
+        return 0.0
+    dead = sum(1 for g in groups if not g.alive)
+    return dead / len(groups)
+
+
 def deadline_feasible(decision: PlacementDecision, now: float,
                       t_deadline: Optional[float]) -> bool:
     """Admission check: can the chosen placement still make the

@@ -27,8 +27,10 @@ from typing import Callable, List, Optional
 class Rejection:
     """Structured admission-control verdict attached to a rejected
     future: ``reason`` is machine-readable ("queue_full" | "deadline" |
-    "shutdown"), the rest is enough context for a client to back off
-    intelligently (retry after the queue drains vs drop the request)."""
+    "shutdown" | "lane_failure" | "brownout"), the rest is enough
+    context for a client to back off intelligently (retry after the
+    queue drains vs drop the request vs downgrade to best-effort
+    later)."""
     reason: str
     workload: str
     detail: str = ""
@@ -125,6 +127,12 @@ class Request:
     n_units: int = field(compare=False, default=1)
     req_id: int = field(compare=False, default_factory=lambda: next(_req_ids))
     future: ServeFuture = field(compare=False, default_factory=ServeFuture)
+    # fault-tolerance state (scheduler-owned, mutated under its lock):
+    retries: int = field(compare=False, default=0)
+    hedge: bool = field(compare=False, default=False)
+    #                     latency-sensitive: eligible for duplication
+    hedged: bool = field(compare=False, default=False)
+    #                     a duplicate execution has been launched
 
     def __post_init__(self):
         self.sort_key = (-self.priority, self.req_id)
@@ -167,11 +175,18 @@ class RequestQueue:
         with self._lock:
             return self._closed
 
-    def push(self, req: Request) -> Optional[Rejection]:
+    def push(self, req: Request, requeue: bool = False
+             ) -> Optional[Rejection]:
         """Enqueue, or return the structured rejection (future already
-        rejected) when the queue is full or closed."""
+        rejected) when the queue is full or closed.
+
+        ``requeue=True`` is the scheduler's retry path: a request whose
+        lane failed re-enters even after ``close()`` — drain() promised
+        its future a resolution, and the retry *is* that resolution.
+        The depth bound still applies (retries must not grow the queue
+        unboundedly either)."""
         with self._not_empty:
-            if self._closed:
+            if self._closed and not requeue:
                 rej = Rejection("shutdown", req.workload,
                                 detail="scheduler is draining or shut down")
             elif len(self._heap) >= self.max_depth:

@@ -42,6 +42,37 @@ disaggregated across lanes from ``CostTerms`` priors
 ``REPRO_SERVE_CONTINUOUS=0`` disables the route: stepper specs fall
 back to their monolithic ``run_one`` path.
 
+**Fault tolerance** (the layer a heterogeneous placement needs most —
+one sick lane silently poisons every projection built on it):
+
+* a **watchdog** thread (``serve-watchdog``) tracks every lane's active
+  execution; one that exceeds ``k × est_span`` (floor
+  ``REPRO_SERVE_EXEC_TIMEOUT_S``) marks the lane *suspect*, flips
+  ``GroupLoad.alive`` and **fails over**: the execution's unresolved
+  requests re-enter the queue.  Idle lane workers heartbeat through
+  ``ft.failure.HeartbeatMonitor`` so a wedged-but-not-executing lane is
+  detected too.  A suspect lane whose stuck execution eventually
+  completes rejoins automatically (its calibration entries were marked
+  stale, so placement re-measures it instead of trusting pre-death
+  numbers).
+* **retry with exactly-once futures**: requeued requests carry a retry
+  budget (``max_retries``); adapters are pure, so a duplicate
+  execution is safe and the resolve-exactly-once ``ServeFuture`` makes
+  whichever copy finishes first the only result.  Only
+  ``LaneFailure``-typed errors (or a lane marked dead) retry —
+  application errors still fail the future immediately.
+* optional **hedging**: ``submit(..., hedge=True)`` requests get a
+  duplicate execution on a second idle lane once the original runs
+  past the hedge delay (``REPRO_SERVE_HEDGE_DELAY_S``; default: p99 of
+  recent service times); first result wins, the loser is cancelled at
+  the next iteration boundary (engine rows) or resolves into a no-op.
+* **brownout degradation**: while any lane is dead, admission sheds
+  best-effort submissions (``priority < 0``) with a structured
+  rejection and dispatch stops lingering for batch coalescing;
+  survivors' placement estimates use only alive peers for staleness
+  shrinkage.  A revived lane rejoins through the existing exploration
+  path.
+
 Lifecycle: ``start()`` (implicit on first submit) → ``drain()`` (stop
 admitting, finish everything accepted, every future resolved exactly
 once) → ``shutdown()`` (drain + join all threads).  Env knobs:
@@ -50,7 +81,10 @@ once) → ``shutdown()`` (drain + join all threads).  Env knobs:
 ``REPRO_SERVE_SPAN_FACTOR`` (pins the otherwise self-probed
 cross-lane contention factor), ``REPRO_SERVE_STALE_TAU`` (staleness
 decay time constant for placement estimates, seconds; 0 disables),
-``REPRO_SERVE_CONTINUOUS`` (step-quantum engine on/off, default on).
+``REPRO_SERVE_CONTINUOUS`` (step-quantum engine on/off, default on),
+``REPRO_SERVE_EXEC_TIMEOUT_S`` (watchdog floor, default 30),
+``REPRO_SERVE_MAX_RETRIES`` (retry budget, default 2),
+``REPRO_SERVE_HEDGE_DELAY_S`` (hedge delay; 0 = p99-based).
 """
 from __future__ import annotations
 
@@ -66,10 +100,11 @@ from typing import Callable, Dict, List, Optional, Sequence
 from repro.core.hybrid_executor import (DeviceGroup, HybridExecutor,
                                         detect_platform)
 from repro.core.metrics import ServeStats
+from repro.ft.failure import HeartbeatMonitor, LaneFailure
 from repro.serve import continuous
 from repro.serve.placement import (SHARED, GroupLoad, PlacementDecision,
-                                   deadline_feasible, plan_disaggregation,
-                                   plan_placement)
+                                   deadline_feasible, degraded_fraction,
+                                   plan_disaggregation, plan_placement)
 from repro.serve.request_queue import (Rejection, Request, RequestQueue,
                                        ServeFuture)
 
@@ -196,10 +231,23 @@ class _Execution:
     decision: PlacementDecision
     t_dispatch: float = 0.0
     est_span: float = 0.0
+    hedge: bool = False              # duplicate launched by the watchdog
 
     @property
     def n_units(self) -> int:
         return sum(max(int(s.total_units), 1) for s in self.specs)
+
+
+class _Active:
+    """One lane's currently running execution, as the watchdog sees it."""
+
+    __slots__ = ("ex", "t0", "deadline", "requeued")
+
+    def __init__(self, ex: _Execution, t0: float, deadline: float):
+        self.ex = ex
+        self.t0 = t0
+        self.deadline = deadline
+        self.requeued = False        # failover already requeued its work
 
 
 class Scheduler:
@@ -227,6 +275,12 @@ class Scheduler:
                  failure_injector=None,
                  explore_every: int = 16,
                  staleness_tau_s: Optional[float] = None,
+                 max_retries: Optional[int] = None,
+                 exec_timeout_s: Optional[float] = None,
+                 exec_timeout_k: float = 8.0,
+                 hedge_delay_s: Optional[float] = None,
+                 heartbeat_timeout_s: Optional[float] = None,
+                 watchdog_interval_s: Optional[float] = None,
                  clock: Callable[[], float] = time.monotonic):
         if executor is not None:
             self._ex = executor
@@ -272,6 +326,36 @@ class Scheduler:
         self.stats = ServeStats()
         self._injector = failure_injector
         self._step = 0
+        # -- fault-tolerance knobs --------------------------------------
+        if max_retries is None:
+            max_retries = int(_env_float("REPRO_SERVE_MAX_RETRIES", 2))
+        self.max_retries = max(int(max_retries), 0)
+        if exec_timeout_s is None:
+            exec_timeout_s = _env_float("REPRO_SERVE_EXEC_TIMEOUT_S", 30.0)
+        self.exec_timeout_s = max(float(exec_timeout_s), 1e-3)
+        self.exec_timeout_k = max(float(exec_timeout_k), 1.0)
+        if hedge_delay_s is None:
+            hedge_delay_s = _env_float("REPRO_SERVE_HEDGE_DELAY_S", 0.0)
+        self.hedge_delay_s = max(float(hedge_delay_s), 0.0)  # 0 = p99
+        if heartbeat_timeout_s is None:
+            heartbeat_timeout_s = max(self.exec_timeout_s, 1.0)
+        self.heartbeat_timeout_s = max(float(heartbeat_timeout_s), 1e-3)
+        if watchdog_interval_s is None:
+            watchdog_interval_s = max(
+                0.005, min(self.exec_timeout_s / 4,
+                           self.heartbeat_timeout_s / 4, 1.0))
+            if self.hedge_delay_s > 0:
+                watchdog_interval_s = min(watchdog_interval_s,
+                                          max(self.hedge_delay_s / 4, 0.005))
+        self.watchdog_interval_s = max(float(watchdog_interval_s), 0.001)
+        self._hb_interval = max(min(self.heartbeat_timeout_s / 4, 0.25),
+                                0.01)
+        self._hb = HeartbeatMonitor([g.name for g in self.groups],
+                                    timeout_s=self.heartbeat_timeout_s,
+                                    clock=clock)
+        self._active: Dict[str, _Active] = {}  # lane -> running execution
+        self._suspect: set = set()             # lanes downed by watchdog
+        self._wd_stop = threading.Event()
         # anti-starvation exploration: a lane whose cached estimate
         # says "slow" never gets traffic, so the estimate never heals —
         # a transient bad measurement (contention, GC pause, stale disk
@@ -316,6 +400,8 @@ class Scheduler:
                 name=f"serve-{g.name}", daemon=True))
         self._threads.append(threading.Thread(
             target=self._shared_worker, name="serve-shared", daemon=True))
+        self._threads.append(threading.Thread(
+            target=self._watchdog_loop, name="serve-watchdog", daemon=True))
         for t in self._threads:
             t.start()
         return self
@@ -359,6 +445,7 @@ class Scheduler:
             self.drain(timeout)
         with self._lock:
             self._stopped = True
+        self._wd_stop.set()
         with self._engines_lock:
             engines = list(self._engines.values())
         for eng in engines:
@@ -387,24 +474,38 @@ class Scheduler:
     # -- submission -----------------------------------------------------
     def submit(self, workload: str, payload=None,
                deadline: Optional[float] = None,
-               priority: int = 0) -> ServeFuture:
+               priority: int = 0, hedge: bool = False) -> ServeFuture:
         """Enqueue one request.  ``deadline`` is seconds from now; a
         request that cannot (or did not) finish in time resolves with a
         structured ``RequestRejected`` instead of hanging.  Never
-        blocks: admission control answers immediately."""
+        blocks: admission control answers immediately.
+
+        ``hedge=True`` marks the request latency-sensitive: once its
+        execution runs past the hedge delay the watchdog duplicates it
+        on an idle lane and the first result wins.  ``priority < 0``
+        marks it best-effort: shed first under brownout (a lane is
+        down and the survivors are absorbing its load)."""
         self.start()
         now = self.clock()
         req = Request(workload=workload, payload=payload,
                       priority=priority, deadline_s=deadline,
                       t_submit=now,
                       t_deadline=None if deadline is None
-                      else now + max(deadline, 0.0))
+                      else now + max(deadline, 0.0),
+                      hedge=hedge)
         with self._lock:
             self.stats.submitted += 1
             if self._draining or self._stopped:
                 self.stats.rejected_shutdown += 1
                 req.reject(Rejection("shutdown", workload,
                                      detail="scheduler is draining"))
+                return req.future
+            if priority < 0 and self._brownout_locked():
+                self.stats.shed_brownout += 1
+                req.reject(Rejection(
+                    "brownout", workload,
+                    detail="best-effort shed: a lane is down and "
+                           "survivors are absorbing its load"))
                 return req.future
         try:
             spec = self._make_spec(workload, payload)
@@ -439,7 +540,17 @@ class Scheduler:
                     self._idle.notify_all()
             if req is None:
                 if self._queue.closed and len(self._queue) == 0:
-                    return
+                    with self._lock:
+                        stopped = self._stopped
+                        in_flight = self.stats.in_flight
+                    if stopped or in_flight <= 0:
+                        return
+                    # closed queue pops return immediately; executions
+                    # are still in flight and a watchdog failover may
+                    # yet requeue their requests — keep polling gently
+                    # (once in_flight hits 0 no unresolved future is
+                    # left, so no retry can ever arrive: safe to exit)
+                    time.sleep(0.01)
                 continue
             batch = [req]
             if self.policy == "cost" and self.max_batch > 1:
@@ -451,28 +562,50 @@ class Scheduler:
                 # linger per cycle serialized dispatch into the p50 at
                 # high arrival rates).  Engine-routed (stepper) specs
                 # never linger — the engine batches at step boundaries,
-                # so waiting here only delays their prefill
+                # so waiting here only delays their prefill.  Brownout
+                # (a lane is down) also skips the linger: the batch
+                # window was priced for full capacity
                 if (len(batch) < self.max_batch
                         and self.batch_window_s > 0
                         and not self._queue.closed
                         and len(self._queue) == 0
+                        and not self._brownout()
                         and not (continuous_enabled() and getattr(
                             req.payload, "stepper", None) is not None)):
                     time.sleep(self.batch_window_s)
                     batch += self._queue.pop_matching(
                         req.workload, req.bucket,
                         self.max_batch - len(batch))
-            self._dispatch(batch)
+            # a requeued request may have been resolved by its original
+            # execution while it waited — dispatching it again would
+            # only burn device time on a no-op resolve
+            batch = [r for r in batch if not r.future.done()]
+            if batch:
+                self._dispatch(batch)
 
     def _apply_injection(self) -> None:
-        if self._injector is None:
+        inj = self._injector
+        if inj is None:
             return
-        kill, revive = self._injector.at_step(self._step)
-        with self._lock:
-            if kill and kill in self._loads:
-                self._loads[kill].alive = False
-            if revive and revive in self._loads:
-                self._loads[revive].alive = True
+        if hasattr(inj, "at_step"):
+            kill, revive = inj.at_step(self._step)
+            if kill:
+                self._lane_death(kill, "injected kill")
+            if revive:
+                self._lane_revive(revive)
+        self._apply_time_injection()
+
+    def _apply_time_injection(self) -> None:
+        """Time-based (chaos) kills/revives: polled by the watchdog
+        tick AND at each dispatch, so faults land even between ticks."""
+        inj = self._injector
+        if inj is None or not hasattr(inj, "at_time"):
+            return
+        kills, revives = inj.at_time(self.clock())
+        for name in kills:
+            self._lane_death(name, "injected kill")
+        for name in revives:
+            self._lane_revive(name)
 
     def _dispatch(self, batch: List[Request]) -> None:
         self._apply_injection()
@@ -505,11 +638,14 @@ class Scheduler:
             # "parallel" dedicated lanes are contention, not overlap)
             contention_factor=self.shared_span_factor)
         if decision is None:
+            # every lane is dead: a structured *rejection*, counted as
+            # one (a Rejection delivered to the caller while `failed`
+            # ticked up made the audited invariant's terms lie)
             for r in batch:
-                if r.reject(Rejection("shutdown", r.workload,
+                if r.reject(Rejection("lane_failure", r.workload,
                                       detail="no alive device group")):
                     with self._idle:
-                        self.stats.failed += 1
+                        self.stats.rejected_failure += 1
                         self._idle.notify_all()
             return
         decision = self._maybe_explore(specs[0].workload, loads, decision,
@@ -593,6 +729,18 @@ class Scheduler:
             for r in batch:
                 self._engine_reject(r, e)
             return
+        if eng is None:
+            # a dead-lane window during engine routing must be a
+            # structured rejection, not a dispatcher-crashing
+            # RuntimeError that hangs every queued future
+            for r in batch:
+                if r.reject(Rejection(
+                        "lane_failure", r.workload,
+                        detail="no alive device group for engine")):
+                    with self._idle:
+                        self.stats.rejected_failure += 1
+                        self._idle.notify_all()
+            return
         with self._lock:
             if len(batch) > 1:
                 self.stats.batches += 1
@@ -605,13 +753,18 @@ class Scheduler:
                         self.stats.rejected_shutdown += 1
                         self._idle.notify_all()
 
-    def _engine_for(self, stepper) -> continuous.ContinuousEngine:
+    def _engine_for(self, stepper
+                    ) -> Optional[continuous.ContinuousEngine]:
+        """The (lazily built) engine for this stepper, or None when no
+        alive lane exists to place it on (caller rejects)."""
         key = id(stepper)
         with self._engines_lock:
             eng = self._engines.get(key)
             if eng is not None:
                 return eng
             plan = self._plan_engine_lanes(stepper)
+            if plan is None:
+                return None
             pre_g = next(g for g in self.groups
                          if g.name == plan.prefill_group)
             dec_g = next(g for g in self.groups
@@ -629,6 +782,10 @@ class Scheduler:
                 with self._lock:
                     self.stats.engine_evictions += k
 
+            def on_cancel(k):
+                with self._lock:
+                    self.stats.engine_cancellations += k
+
             eng = continuous.ContinuousEngine(
                 stepper,
                 resolve=self._resolve,
@@ -640,7 +797,7 @@ class Scheduler:
                 prefill_ctx=lambda: self._device_ctx(pre_g),
                 step_ctx=lambda: self._device_ctx(dec_g),
                 hooks={"on_step": on_step, "on_join": on_join,
-                       "on_evict": on_evict},
+                       "on_evict": on_evict, "on_cancel": on_cancel},
                 clock=self.clock)
             self._engines[key] = eng
             self.engine_placements[stepper.workload] = plan
@@ -651,7 +808,8 @@ class Scheduler:
         probes: a fresh process must place with last_probe_runs == 0).
         Prefill is compute-bound, decode bandwidth-bound — predict()
         rates them against the measured backend profile, scaled by
-        each group's slowdown."""
+        each group's slowdown.  None when no lane is alive (caller
+        delivers a structured rejection)."""
         from repro.core import cost_model
         with self._lock:
             loads = [GroupLoad(ld.name, None, ld.busy_until, ld.alive)
@@ -660,10 +818,7 @@ class Scheduler:
                for g in self.groups}
         dec = {g.name: cost_model.predict(stepper.decode_cost) * g.slowdown
                for g in self.groups}
-        plan = plan_disaggregation(loads, pre, dec)
-        if plan is None:
-            raise RuntimeError("no alive device group for engine")
-        return plan
+        return plan_disaggregation(loads, pre, dec)
 
     def _engine_reject(self, req: Request, exc: BaseException) -> None:
         if req.future._reject(exc):
@@ -680,10 +835,14 @@ class Scheduler:
         cost-model prior, else None (probe-only workloads fall back to
         symmetric placement until their first measured execution)."""
         g = next(g for g in self.groups if g.name == group_name)
+        # peers = the OTHER *alive* lanes: after a failover the
+        # survivors' recalibrated projections must not shrink toward a
+        # dead lane's numbers (its entries were marked stale at death)
         cached = self._ex.cache.get_decayed(
             spec.workload, group_name, g.slowdown,
             peers=[(o.name, o.slowdown) for o in self.groups
-                   if o.name != group_name],
+                   if o.name != group_name
+                   and self._loads[o.name].alive],
             tau_s=self.staleness_tau_s)
         if cached is not None:
             return cached
@@ -713,32 +872,79 @@ class Scheduler:
     def _group_worker(self, g: DeviceGroup) -> None:
         lane = self._lanes[g.name]
         while True:
-            ex = lane.get()
+            try:
+                ex = lane.get(timeout=self._hb_interval)
+            except queue.Empty:
+                self._hb.beat(g.name)      # idle-but-alive heartbeat
+                # a suspect lane whose worker is back in its idle loop
+                # is demonstrably responsive again: rejoin
+                self._maybe_rejoin(g.name)
+                continue
             if ex is None:
                 return
+            self._hb.beat(g.name)
             locks = self._lane_locks(g.name)
             for lk in locks:
                 lk.acquire()
             try:
-                self._run_dedicated(ex, g)
+                self._lane_run(g.name, ex,
+                               lambda: self._run_dedicated(ex, g))
             finally:
                 for lk in reversed(locks):
                     lk.release()
+            self._hb.beat(g.name)
+            self._maybe_rejoin(g.name)
 
     def _shared_worker(self) -> None:
         lane = self._lanes[_SHARED_LANE]
         while True:
-            ex = lane.get()
+            try:
+                ex = lane.get(timeout=self._hb_interval)
+            except queue.Empty:
+                continue
             if ex is None:
                 return
             locks = self._lane_locks(None)
             for lk in locks:
                 lk.acquire()
             try:
-                self._run_shared(ex)
+                self._lane_run(_SHARED_LANE, ex,
+                               lambda: self._run_shared(ex))
             finally:
                 for lk in reversed(locks):
                     lk.release()
+
+    def _lane_run(self, lane_name: str, ex: _Execution,
+                  fn: Callable[[], None]) -> None:
+        """Run one execution with the watchdog watching: registered in
+        the active table with its deadline (``k × est_span``, floored
+        at ``exec_timeout_s``) for the duration."""
+        t0 = self.clock()
+        deadline = t0 + max(self.exec_timeout_k * max(ex.est_span, 0.0),
+                            self.exec_timeout_s)
+        act = _Active(ex, t0, deadline)
+        with self._lock:
+            self._active[lane_name] = act
+        try:
+            fn()
+        finally:
+            with self._lock:
+                self._active.pop(lane_name, None)
+
+    def _maybe_rejoin(self, name: str) -> None:
+        """A watchdog-suspected lane whose stuck execution finally
+        completed is wedged no more: flip it back alive (its requeued
+        work already ran elsewhere; resolve-exactly-once absorbed the
+        duplicates) and let exploration re-measure it."""
+        with self._idle:
+            if name not in self._suspect:
+                return
+            self._suspect.discard(name)
+            ld = self._loads.get(name)
+            if ld is not None and not ld.alive:
+                ld.alive = True
+                self.stats.lane_revivals += 1
+                self._idle.notify_all()
 
     @staticmethod
     def _device_ctx(g: DeviceGroup):
@@ -797,8 +1003,10 @@ class Scheduler:
         # key: its units (whole member requests) can differ from the
         # base spec's units (e.g. sort segments)
         cal_wl = ex.specs[0].workload
+        faults = self._lane_faults([g.name])
         try:
             with self._device_ctx(g):
+                self._fault_pre(faults)
                 merged = self._merge_batch(ex, kept)
                 if merged is not None:
                     cal_wl = merged.spec.workload
@@ -807,20 +1015,23 @@ class Scheduler:
                     done_units += max(int(merged.spec.total_units), 1)
                     for j, i in enumerate(kept):
                         self._resolve(ex.requests[i],
-                                      merged.demux(value, j), ts)
+                                      merged.demux(value, j), ts,
+                                      hedge=ex.hedge)
                     kept = []
                 for i in kept:
                     r, spec = ex.requests[i], ex.specs[i]
                     ts = self.clock()
                     value = spec.run_one()
                     done_units += max(int(spec.total_units), 1)
-                    self._resolve(r, value, ts)
+                    self._resolve(r, value, ts, hedge=ex.hedge)
+            # an injected slowdown stretches elapsed (below) so the
+            # slowed time is what calibration learns — survivors'
+            # projections recalibrate to the lane's real state
+            self._fault_post(faults, self.clock() - t0)
         except BaseException as e:                 # noqa: BLE001
-            for i in kept:
-                if ex.requests[i].future._reject(e):
-                    with self._idle:
-                        self.stats.failed += 1
-                        self._idle.notify_all()
+            self._fail_or_retry(ex, kept, e,
+                                lane_dead=not self._lane_alive(g.name),
+                                detail=f"lane {g.name}: {e}")
         elapsed = self.clock() - t0
         if done_units > 0 and elapsed > 0:
             self._ex.cache.put(cal_wl, g.name,
@@ -835,19 +1046,21 @@ class Scheduler:
                               dedicated=False, count=False)
             return
         t0 = self.clock()
+        faults = self._lane_faults([g.name for g in self.groups])
         try:
+            self._fault_pre(faults)
             if len(kept) == 1:
                 spec = ex.specs[kept[0]]
                 value = self._run_shared_single(spec)
                 self._resolve(ex.requests[kept[0]], value, t0)
             else:
                 self._run_shared_batch(ex, kept, t0)
+            self._fault_post(faults, self.clock() - t0)
         except BaseException as e:                 # noqa: BLE001
-            for i in kept:
-                if ex.requests[i].future._reject(e):
-                    with self._idle:
-                        self.stats.failed += 1
-                        self._idle.notify_all()
+            any_dead = any(not self._lane_alive(g.name)
+                           for g in self.groups)
+            self._fail_or_retry(ex, kept, e, lane_dead=any_dead,
+                                detail=f"shared execution: {e}")
         self._finish_lane([g.name for g in self.groups], ex,
                           self.clock() - t0, dedicated=False)
 
@@ -904,15 +1117,259 @@ class Scheduler:
         for j, i in enumerate(kept):
             self._resolve(ex.requests[i], out.value[j], t0)
 
-    def _resolve(self, req: Request, value, t_start: float) -> None:
+    def _resolve(self, req: Request, value, t_start: float,
+                 hedge: bool = False) -> None:
         now = self.clock()
         if req.future._resolve(value):
             with self._idle:
                 self.stats.completed += 1
+                if hedge:
+                    self.stats.hedge_wins += 1
                 self.stats.wait_s.observe(t_start - req.t_submit)
                 self.stats.service_s.observe(now - t_start)
+                self.stats.service_q.observe(now - t_start)
                 self.stats.latency_s.observe(now - req.t_submit)
                 self._idle.notify_all()
+
+    # -- fault tolerance ------------------------------------------------
+    def _lane_alive(self, name: str) -> bool:
+        with self._lock:
+            ld = self._loads.get(name)
+            return ld.alive if ld is not None else True
+
+    def _brownout_locked(self) -> bool:
+        return degraded_fraction(list(self._loads.values())) > 0.0
+
+    def _brownout(self) -> bool:
+        with self._lock:
+            return self._brownout_locked()
+
+    def _fail_or_retry(self, ex: _Execution, kept: List[int],
+                       e: BaseException, lane_dead: bool,
+                       detail: str) -> None:
+        """Execution-failure policy: a ``LaneFailure`` (or any error on
+        a lane already marked dead) requeues the unresolved members
+        within their retry budget — adapters are pure, so re-execution
+        is safe.  Application errors reject the future as before: they
+        would fail identically anywhere."""
+        retryable = isinstance(e, LaneFailure) or lane_dead
+        for i in kept:
+            r = ex.requests[i]
+            if r.future.done():
+                continue
+            if retryable:
+                self._requeue(r, detail)
+            elif r.future._reject(e):
+                with self._idle:
+                    self.stats.failed += 1
+                    self._idle.notify_all()
+
+    def _requeue(self, r: Request, why: str) -> None:
+        """Re-admit a lane-failed request (exactly-once: the caller
+        checked the future is unresolved; a racing original resolve
+        just turns the retry into a no-op)."""
+        with self._idle:
+            if self._stopped:
+                if r.reject(Rejection("shutdown", r.workload,
+                                      detail=f"not retried ({why}): "
+                                             "scheduler stopped")):
+                    self.stats.rejected_shutdown += 1
+                    self._idle.notify_all()
+                return
+            if r.retries >= self.max_retries:
+                if r.reject(Rejection(
+                        "lane_failure", r.workload,
+                        detail=f"retry budget ({self.max_retries}) "
+                               f"exhausted: {why}")):
+                    self.stats.rejected_failure += 1
+                    self._idle.notify_all()
+                return
+            r.retries += 1
+            self.stats.retries += 1
+        rej = self._queue.push(r, requeue=True)
+        if rej is not None:
+            with self._idle:
+                self.stats.rejected_full += 1
+                self._idle.notify_all()
+
+    def _lane_death(self, name: str, why: str,
+                    watchdog: bool = False) -> None:
+        """Failover: mark the lane dead, requeue its in-flight and
+        lane-queued work onto the survivors, mark its calibration
+        entries stale (revival re-measures instead of trusting
+        pre-death numbers)."""
+        to_requeue: List[Request] = []
+        with self._idle:
+            ld = self._loads.get(name)
+            if ld is None:
+                return
+            if not ld.alive:
+                if not watchdog:
+                    return  # chaos kill of an already-dead lane: no-op
+            else:
+                ld.alive = False
+                self.stats.lane_deaths += 1
+                self.stats.failovers += 1
+                if watchdog:
+                    self.stats.watchdog_timeouts += 1
+                    self._suspect.add(name)
+                self._idle.notify_all()
+            act = self._active.get(name)
+            if act is not None and not act.requeued:
+                act.requeued = True
+                to_requeue.extend(act.ex.requests)
+        # drain executions still queued behind the dead lane — they
+        # would otherwise wait on a lane that may never run again
+        lane_q = self._lanes.get(name)
+        if lane_q is not None:
+            while True:
+                try:
+                    ex = lane_q.get_nowait()
+                except queue.Empty:
+                    break
+                if ex is None:            # shutdown sentinel: keep it
+                    lane_q.put(None)
+                    break
+                to_requeue.extend(ex.requests)
+                with self._lock:
+                    ld = self._loads[name]
+                    ld.busy_until = max(ld.busy_until - ex.est_span,
+                                        self.clock())
+        self._ex.cache.mark_group_stale(name)
+        for r in to_requeue:
+            if not r.future.done():
+                self._requeue(r, why)
+
+    def _lane_revive(self, name: str) -> None:
+        with self._idle:
+            ld = self._loads.get(name)
+            if ld is None or ld.alive:
+                return
+            ld.alive = True
+            self._suspect.discard(name)
+            self.stats.lane_revivals += 1
+            self._idle.notify_all()
+
+    def _watchdog_loop(self) -> None:
+        while not self._wd_stop.wait(self.watchdog_interval_s):
+            try:
+                self._watchdog_tick()
+            except Exception:                      # noqa: BLE001
+                # the robustness layer must not die on a shutdown race
+                pass
+
+    def _watchdog_tick(self) -> None:
+        now = self.clock()
+        self._apply_time_injection()
+        # 1. execution deadlines: k x est_span (floor exec_timeout_s)
+        with self._lock:
+            expired = [(lane, act) for lane, act in self._active.items()
+                       if not act.requeued and now > act.deadline]
+        for lane, act in expired:
+            if lane == _SHARED_LANE:
+                self._shared_timeout(act)
+            elif self._lane_alive(lane):
+                self._lane_death(
+                    lane,
+                    f"execution exceeded {act.deadline - act.t0:.3f}s "
+                    f"watchdog deadline", watchdog=True)
+        # 2. heartbeats: an idle lane that stopped beating has a wedged
+        # worker (a lane busy in a long legitimate execution is governed
+        # by its exec deadline instead — no false positives)
+        for name in self._hb.check():
+            with self._lock:
+                ld = self._loads.get(name)
+                busy = name in self._active
+            if ld is None or not ld.alive or busy:
+                continue
+            self._lane_death(name, "missed heartbeats", watchdog=True)
+        # 3. hedging: duplicate slow latency-sensitive requests
+        self._hedge_tick(now)
+
+    def _shared_timeout(self, act: _Active) -> None:
+        """A timed-out shared execution has no single lane to kill —
+        requeue its unresolved members (they will re-plan, likely onto
+        dedicated lanes) and leave the stuck run to finish or lose."""
+        with self._idle:
+            if act.requeued:
+                return
+            act.requeued = True
+            self.stats.watchdog_timeouts += 1
+            self.stats.failovers += 1
+            self._idle.notify_all()
+        for r in act.ex.requests:
+            if not r.future.done():
+                self._requeue(r, "shared execution timed out")
+
+    def _hedge_delay(self) -> Optional[float]:
+        if self.hedge_delay_s > 0:
+            return self.hedge_delay_s
+        if self.stats.service_q.n < 8:
+            return None                 # not enough tail signal yet
+        return self.stats.service_q.quantile(0.99)
+
+    def _hedge_tick(self, now: float) -> None:
+        delay = self._hedge_delay()
+        if delay is None:
+            return
+        launches: List[tuple] = []
+        with self._lock:
+            for lane, act in self._active.items():
+                if lane == _SHARED_LANE or act.ex.hedge:
+                    continue
+                if now - act.t0 < delay:
+                    continue
+                for idx, r in enumerate(act.ex.requests):
+                    if (not r.hedge or r.hedged or r.future.done()):
+                        continue
+                    tgt = None
+                    for name, ld in self._loads.items():
+                        if (name == lane or not ld.alive
+                                or name in self._active
+                                or not self._lanes[name].empty()):
+                            continue
+                        tgt = name
+                        break
+                    if tgt is None:
+                        continue        # no idle lane: hedge later
+                    r.hedged = True
+                    self.stats.hedges += 1
+                    est = max(act.ex.est_span, 0.0)
+                    dec = PlacementDecision(
+                        "dedicated", [tgt], now, now + est, est)
+                    hx = _Execution([r], [act.ex.specs[idx]], dec,
+                                    t_dispatch=now, est_span=est,
+                                    hedge=True)
+                    self._loads[tgt].busy_until = (
+                        max(self._loads[tgt].busy_until, now) + est)
+                    launches.append((tgt, hx))
+        for tgt, hx in launches:
+            self._lanes[tgt].put(hx)
+
+    def _lane_faults(self, names: Sequence[str]) -> List[object]:
+        """Chaos-injector execution-level faults active on these lanes
+        right now (empty without a time-based injector)."""
+        inj = self._injector
+        if inj is None or not hasattr(inj, "exec_fault"):
+            return []
+        now = self.clock()
+        return [f for f in (inj.exec_fault(n, now) for n in names)
+                if f is not None]
+
+    @staticmethod
+    def _fault_pre(faults: Sequence[object]) -> None:
+        for f in faults:
+            if f.kind == "hang":
+                time.sleep(f.duration_s)
+            elif f.kind in ("kill", "flaky"):
+                raise LaneFailure(f"injected {f.kind} on lane {f.lane}")
+
+    @staticmethod
+    def _fault_post(faults: Sequence[object], elapsed: float) -> None:
+        slow = max([f.factor for f in faults if f.kind == "slow"],
+                   default=1.0)
+        if slow > 1.0 and elapsed > 0:
+            time.sleep((slow - 1.0) * elapsed)
 
     def _finish_lane(self, names: Sequence[str], ex: _Execution,
                      elapsed: float, dedicated: bool,

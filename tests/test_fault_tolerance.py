@@ -1,0 +1,488 @@
+"""Fault-tolerant serving (PR 7): lane watchdog + heartbeat failover,
+retried/hedged requests with exactly-once futures, brownout
+degradation, and the chaos scenario injector.
+
+Scheduler tests drive toy spec factories (pure-Python work with
+deterministic sleeps) against fake accel/host device groups, with
+calibration pre-seeded so watchdog deadlines derive from small,
+deterministic projected spans; the chaos injector is tested as pure
+data with a fake clock.
+"""
+import time
+from dataclasses import dataclass
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core.calibration import (clear_calibration_cache,
+                                    get_calibration_cache)
+from repro.core.hybrid_executor import DeviceGroup, HybridExecutor
+from repro.core.metrics import Percentile
+from repro.ft.failure import (ChaosInjector, FailureInjector, LaneFailure,
+                              LaneFault)
+from repro.serve.request_queue import (Request, RequestQueue,
+                                       RequestRejected)
+from repro.serve.scheduler import Scheduler
+
+
+# ---------------------------------------------------------------------------
+# toy specs (same idiom as test_serving)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ToySpec:
+    workload: str
+    total_units: int
+    run_one: object
+    run_share: object
+    combine: object
+    unit_cost: object = None
+    comm_cost: float = 0.0
+    whole_shares: bool = False
+    steal: object = None
+    bucket: str = "b"
+
+
+def toy_factory(work_s: float = 0.0, units: int = 4, record=None):
+    def factory(workload, payload):
+        def run_one():
+            if work_s:
+                time.sleep(work_s)
+            if record is not None:
+                record.append(payload)
+            return ("done", workload, payload)
+
+        def run_share(g, s, k):
+            if work_s:
+                time.sleep(work_s * k / units)
+            return list(range(s, s + k))
+
+        return ToySpec(workload=workload, total_units=units,
+                       run_one=run_one, run_share=run_share,
+                       combine=lambda outs: [x for o in outs for x in o],
+                       bucket=f"{workload}/b")
+
+    return factory
+
+
+def make_scheduler(**kw):
+    groups = [DeviceGroup("accel", [], "accel"),
+              DeviceGroup("host", [], "host")]
+    kw.setdefault("executor", HybridExecutor(groups=groups, n_chunks=4))
+    kw.setdefault("batch_window_s", 0.0)
+    kw.setdefault("shared_span_factor", 1.0)
+    return Scheduler(**kw)
+
+
+def seed_affinity(s, workload="wl", accel=1e-3, host=2e-3):
+    """Pre-seed calibration so placement projects small spans (the
+    watchdog deadline is ``max(k * est_span, exec_timeout_s)``) and no
+    probe/warmup re-runs the toy callables."""
+    s._ex.cache.put(workload, "accel", accel)
+    s._ex.cache.put(workload, "host", host)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_calibration():
+    clear_calibration_cache()
+    yield
+    clear_calibration_cache()
+
+
+def _wait(cond, timeout=5.0, interval=0.01):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(interval)
+    return cond()
+
+
+# ---------------------------------------------------------------------------
+# tentpole: watchdog timeout -> failover -> retry -> suspect rejoin
+# ---------------------------------------------------------------------------
+def test_watchdog_failover_retries_on_survivor_then_rejoins():
+    """A hung execution must trip the watchdog deadline, down the lane,
+    requeue the in-flight request onto the survivor, and — once the
+    stuck execution finally returns — rejoin the suspect lane."""
+    inj = ChaosInjector([LaneFault(t=0.0, lane="accel", kind="hang",
+                                   duration_s=0.6)])
+    s = make_scheduler(spec_factory=toy_factory(work_s=0.005),
+                       failure_injector=inj, max_batch=1,
+                       split_overhead_s=100.0,
+                       exec_timeout_s=0.08, exec_timeout_k=1.0,
+                       watchdog_interval_s=0.01)
+    s.start()
+    seed_affinity(s)                       # accel faster -> hang lands there
+    fut = s.submit("wl", {"i": 0})
+    assert fut.result(timeout=10) == ("done", "wl", {"i": 0})
+    st = s.stats
+    assert st.watchdog_timeouts >= 1
+    assert st.lane_deaths >= 1
+    assert st.retries >= 1
+    assert st.completed == 1               # exactly once, despite the
+    #                                        late duplicate resolve
+    assert _wait(lambda: s._loads["accel"].alive and
+                 s.stats.lane_revivals >= 1)
+    s.shutdown()
+    assert st.completed == 1 and st.in_flight == 0
+
+
+def test_retry_budget_exhausted_is_structured_lane_failure():
+    def factory(workload, payload):
+        def run_one():
+            raise LaneFailure("injected: lane wedged")
+
+        return ToySpec(workload=workload, total_units=2, run_one=run_one,
+                       run_share=run_one, combine=lambda o: o,
+                       bucket="b")
+
+    s = make_scheduler(spec_factory=factory, max_retries=1,
+                       max_batch=1, split_overhead_s=100.0)
+    s.start()
+    seed_affinity(s)
+    fut = s.submit("wl", None)
+    with pytest.raises(RequestRejected) as ei:
+        fut.result(timeout=10)
+    assert ei.value.rejection.reason == "lane_failure"
+    assert "retry budget" in ei.value.rejection.detail
+    st = s.stats
+    assert st.retries == 1                 # budget spent before rejecting
+    assert st.rejected_failure == 1
+    assert st.failed == 0 and st.completed == 0
+    s.shutdown()
+    assert st.in_flight == 0
+
+
+def test_lane_failure_exception_retried_to_success():
+    attempts = []
+
+    def factory(workload, payload):
+        def run_one():
+            attempts.append(1)
+            if len(attempts) == 1:
+                raise LaneFailure("transient blip")
+            return ("ok", workload)
+
+        return ToySpec(workload=workload, total_units=2, run_one=run_one,
+                       run_share=run_one, combine=lambda o: o,
+                       bucket="b")
+
+    s = make_scheduler(spec_factory=factory, max_batch=1,
+                       split_overhead_s=100.0)
+    s.start()
+    seed_affinity(s)
+    assert s.submit("wl", None).result(timeout=10) == ("ok", "wl")
+    st = s.stats
+    assert st.completed == 1
+    assert st.retries >= 1
+    assert st.failed == 0                  # lane faults never count as
+    s.shutdown()                           # application failures
+    assert st.in_flight == 0
+
+
+def test_application_error_fails_future_without_burning_retries():
+    def factory(workload, payload):
+        def run_one():
+            raise ValueError("bad payload")
+
+        return ToySpec(workload=workload, total_units=2, run_one=run_one,
+                       run_share=run_one, combine=lambda o: o,
+                       bucket="b")
+
+    s = make_scheduler(spec_factory=factory, max_batch=1,
+                       split_overhead_s=100.0)
+    s.start()
+    seed_affinity(s)
+    with pytest.raises(ValueError):
+        s.submit("wl", None).result(timeout=10)
+    st = s.stats
+    assert st.failed == 1
+    assert st.retries == 0 and st.rejected_failure == 0
+    s.shutdown()
+    assert st.in_flight == 0
+
+
+# ---------------------------------------------------------------------------
+# tentpole: hedged requests, first result wins
+# ---------------------------------------------------------------------------
+def test_hedge_duplicates_slow_request_first_result_wins():
+    """The original execution hangs (not long enough for the watchdog);
+    past the hedge delay a duplicate launches on the idle lane and its
+    result resolves the future — the late original is a no-op."""
+    inj = ChaosInjector([LaneFault(t=0.0, lane="accel", kind="hang",
+                                   duration_s=0.5)])
+    s = make_scheduler(spec_factory=toy_factory(work_s=0.005),
+                       failure_injector=inj, max_batch=1,
+                       split_overhead_s=100.0,
+                       hedge_delay_s=0.02, watchdog_interval_s=0.005)
+    s.start()
+    seed_affinity(s)                       # original lands on accel
+    fut = s.submit("wl", {"i": 0}, hedge=True)
+    assert fut.result(timeout=10) == ("done", "wl", {"i": 0})
+    st = s.stats
+    assert st.hedges == 1
+    assert st.hedge_wins == 1
+    assert st.completed == 1
+    s.shutdown()                           # joins the hung original
+    assert st.completed == 1 and st.in_flight == 0
+
+
+# ---------------------------------------------------------------------------
+# tentpole: brownout degradation while a lane is down
+# ---------------------------------------------------------------------------
+def test_brownout_sheds_best_effort_keeps_normal_traffic():
+    inj = FailureInjector(kill={1: "accel"})
+    s = make_scheduler(spec_factory=toy_factory(work_s=0.005),
+                       failure_injector=inj, max_batch=1,
+                       split_overhead_s=100.0)
+    assert s.submit("wl", {"i": 0}).result(timeout=10)[0] == "done"
+    assert s.submit("wl", {"i": 1}).result(timeout=10)[0] == "done"
+    assert not s._loads["accel"].alive     # step-1 kill landed
+    fut_be = s.submit("wl", {"i": 2}, priority=-1)
+    with pytest.raises(RequestRejected) as ei:
+        fut_be.result(timeout=1)
+    assert ei.value.rejection.reason == "brownout"
+    assert s.stats.shed_brownout == 1
+    # normal-priority traffic is still served by the survivor
+    assert s.submit("wl", {"i": 3}).result(timeout=10) \
+        == ("done", "wl", {"i": 3})
+    st = s.stats
+    s.shutdown()
+    assert st.completed == 3 and st.in_flight == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: engine routing / monolithic dispatch with every lane dead
+# ---------------------------------------------------------------------------
+def _single_dead_group_scheduler(spec_factory):
+    groups = [DeviceGroup("accel", [], "accel")]
+    return Scheduler(executor=HybridExecutor(groups=groups, n_chunks=2),
+                     spec_factory=spec_factory, batch_window_s=0.0,
+                     max_batch=1, shared_span_factor=1.0,
+                     failure_injector=FailureInjector(kill={0: "accel"}))
+
+
+def test_engine_route_all_lanes_dead_structured_rejection():
+    """A dead-lane window during engine routing must be a structured
+    rejection, not a dispatcher-crashing RuntimeError that hangs every
+    queued future."""
+    from repro.core.cost_model import CostTerms
+
+    def factory(workload, payload):
+        return SimpleNamespace(
+            workload=workload, bucket="sb", total_units=1,
+            unit_cost=None, comm_cost=0.0,
+            stepper=SimpleNamespace(workload=workload, n_slots=2,
+                                    prefill_cost=CostTerms(),
+                                    decode_cost=CostTerms()))
+
+    s = _single_dead_group_scheduler(factory)
+    fut = s.submit("toy-cb", None)
+    with pytest.raises(RequestRejected) as ei:
+        fut.result(timeout=10)
+    assert ei.value.rejection.reason == "lane_failure"
+    assert "engine" in ei.value.rejection.detail
+    st = s.stats
+    assert st.rejected_failure == 1
+    assert st.failed == 0                  # a Rejection delivered while
+    s.shutdown()                           # `failed` ticked broke the
+    assert st.in_flight == 0               # audited invariant before
+
+
+def test_monolithic_all_lanes_dead_counts_as_rejected():
+    s = _single_dead_group_scheduler(toy_factory(work_s=0.0))
+    fut = s.submit("wl", {"i": 0})
+    with pytest.raises(RequestRejected) as ei:
+        fut.result(timeout=10)
+    assert ei.value.rejection.reason == "lane_failure"
+    assert "no alive device group" in ei.value.rejection.detail
+    st = s.stats
+    assert st.rejected_failure == 1 and st.failed == 0
+    s.shutdown()
+    assert st.in_flight == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: kill landing while a shared (work-split) execution runs
+# ---------------------------------------------------------------------------
+def test_kill_during_shared_execution_keeps_exactly_once():
+    """A lane kill while a work-shared execution is in flight must not
+    drop, hang, or double-resolve anything: the shared run finishes
+    (its work is pure), queued work behind the dead lane requeues, and
+    every future resolves exactly once."""
+    inj = FailureInjector(kill={2: "accel"})
+    s = make_scheduler(spec_factory=toy_factory(work_s=0.05),
+                       failure_injector=inj, max_batch=1,
+                       split_overhead_s=0.0)
+    futs = [s.submit("wl", i) for i in range(5)]
+    vals = [f.result(timeout=30) for f in futs]
+    st = s.stats
+    s.shutdown()
+    assert len(vals) == 5                  # all resolved, none raised
+    assert st.completed == 5
+    assert st.shared >= 1                  # a split actually ran
+    assert st.lane_deaths == 1
+    assert st.failed == 0 and st.in_flight == 0
+
+
+# ---------------------------------------------------------------------------
+# chaos injector: pure-data scripting with a fake clock
+# ---------------------------------------------------------------------------
+def test_lane_fault_validates_kind():
+    with pytest.raises(ValueError):
+        LaneFault(t=0.0, lane="a", kind="explode")
+
+
+def test_chaos_at_time_emits_each_transition_exactly_once():
+    t = {"now": 100.0}
+    inj = ChaosInjector([LaneFault(t=1.0, lane="a", kind="kill"),
+                         LaneFault(t=2.0, lane="a", kind="revive")],
+                        clock=lambda: t["now"])
+    inj.arm()
+    assert inj.at_time() == ([], [])
+    t["now"] = 101.5
+    assert inj.at_time() == (["a"], [])
+    assert inj.at_time() == ([], [])       # once, not re-emitted
+    t["now"] = 102.5
+    assert inj.at_time() == ([], ["a"])
+    assert inj.at_time() == ([], [])
+    assert inj.at_step(7) == (None, None)  # step-schedule compat no-op
+
+
+def test_chaos_exec_fault_kill_until_revive_and_windows():
+    t = {"now": 0.0}
+    inj = ChaosInjector([
+        LaneFault(t=1.0, lane="a", kind="kill"),
+        LaneFault(t=2.0, lane="a", kind="revive"),
+        LaneFault(t=3.0, lane="a", kind="hang", duration_s=0.5),
+        LaneFault(t=5.0, lane="b", kind="slow", duration_s=1.0,
+                  factor=3.0),
+    ], clock=lambda: t["now"])
+    inj.arm()
+    assert inj.exec_fault("a") is None     # before the kill
+    t["now"] = 1.5
+    f = inj.exec_fault("a")
+    assert f is not None and f.kind == "kill"
+    assert inj.exec_fault("b") is None     # other lanes unaffected
+    t["now"] = 2.5
+    assert inj.exec_fault("a") is None     # revived
+    t["now"] = 3.2
+    f = inj.exec_fault("a")
+    assert f.kind == "hang" and f.duration_s == 0.5
+    t["now"] = 3.8
+    assert inj.exec_fault("a") is None     # window closed
+    t["now"] = 5.5
+    f = inj.exec_fault("b")
+    assert f.kind == "slow" and f.factor == 3.0
+
+
+def test_chaos_flaky_draws_are_seed_deterministic():
+    faults = [LaneFault(t=0.0, lane="a", kind="flaky", duration_s=10.0,
+                        p=0.5)]
+    t = {"now": 1.0}
+    a = ChaosInjector(faults, clock=lambda: t["now"], seed=7)
+    b = ChaosInjector(faults, clock=lambda: t["now"], seed=7)
+    a.arm(t0=0.0)
+    b.arm(t0=0.0)
+    seq_a = [a.exec_fault("a") is not None for _ in range(64)]
+    seq_b = [b.exec_fault("a") is not None for _ in range(64)]
+    assert seq_a == seq_b                  # same seed, same timeline
+    assert any(seq_a) and not all(seq_a)   # p=0.5 actually draws
+
+
+# ---------------------------------------------------------------------------
+# requeue path / percentile / calibration staleness primitives
+# ---------------------------------------------------------------------------
+def test_push_requeue_bypasses_closed_but_not_depth():
+    q = RequestQueue(max_depth=1)
+    q.close()
+    rejected = q.push(Request(workload="w", payload=0))
+    assert rejected is not None and rejected.reason == "shutdown"
+    assert q.push(Request(workload="w", payload=1), requeue=True) is None
+    full = q.push(Request(workload="w", payload=2), requeue=True)
+    assert full is not None and full.reason == "queue_full"
+
+
+def test_percentile_ring_buffer_quantiles():
+    p = Percentile(maxlen=8)
+    assert p.quantile(0.99) is None and p.n == 0
+    for v in range(1, 11):                 # 1..10; window keeps 3..10
+        p.observe(float(v))
+    assert p.n == 8
+    assert p.quantile(0.0) == 3.0
+    assert p.quantile(1.0) == 10.0
+    assert p.quantile(0.5) == 6.0
+
+
+def test_mark_group_stale_shrinks_to_surviving_peers():
+    cache = get_calibration_cache()
+    cache.put("wl", "accel", 1e-3)
+    cache.put("wl", "host", 8e-3)
+    fresh = cache.get_decayed("wl", "host", peers=[("accel", 1.0)],
+                              tau_s=300.0)
+    assert fresh == pytest.approx(8e-3, rel=0.01)
+    cache.mark_group_stale("host")         # lane death
+    stale = cache.get_decayed("wl", "host", peers=[("accel", 1.0)],
+                              tau_s=300.0)
+    assert stale == pytest.approx(1e-3, rel=0.05)   # fully shrunk
+    other = cache.get_decayed("wl", "accel", peers=[("host", 1.0)],
+                              tau_s=300.0)
+    assert other == pytest.approx(1e-3, rel=0.01)   # survivor untouched
+    assert not cache.warmed_in_process("wl", "host")
+
+
+# ---------------------------------------------------------------------------
+# engine cancellation at the step boundary (hedge-loser cleanup)
+# ---------------------------------------------------------------------------
+def test_engine_cancels_externally_resolved_rows_at_boundary():
+    """Rows whose future resolved elsewhere (hedge winner, shutdown)
+    must be dropped at the next step boundary — a live row frees its
+    slot, a ready row never takes one — without running finish()."""
+    from repro.serve.continuous import ContinuousEngine
+
+    class _ToyStepper:
+        workload = "toy-cb"
+        n_slots = 1
+
+        def init_slots(self):
+            return {"steps": 0}
+
+        def prefill(self, spec):
+            return [(None, None, spec["n_steps"])]
+
+        def insert(self, state, slot, row_state):
+            return state
+
+        def step(self, state):
+            time.sleep(0.002)
+            return {"steps": state["steps"] + 1}, None
+
+        def finish(self, state, slot, first_out, collected):
+            return "finished"
+
+        def assemble(self, rows):
+            return rows[0]
+
+    finished = []
+    cancelled = {"n": 0}
+    eng = ContinuousEngine(
+        _ToyStepper(),
+        resolve=lambda req, v, t0: (req.future._resolve(v),
+                                    finished.append(req.payload)),
+        reject=lambda req, e: req.future._reject(e),
+        hooks={"on_cancel":
+               lambda k: cancelled.__setitem__("n", cancelled["n"] + k)})
+    try:
+        a = Request(workload="toy-cb", payload="A")
+        assert eng.submit(a, {"n_steps": 2000}, 0.0)
+        assert _wait(lambda: eng.snapshot()["joins"] >= 1)
+        b = Request(workload="toy-cb", payload="B")
+        assert eng.submit(b, {"n_steps": 2}, 0.0)   # queues behind A
+        b.future._resolve("hedged elsewhere")       # ready-row cancel
+        a.future._resolve("hedged elsewhere")       # live-row cancel
+        assert eng.wait_idle(timeout=10)
+    finally:
+        eng.shutdown()
+    assert eng.cancellations == 2
+    assert cancelled["n"] == 2
+    assert finished == []                  # finish() never ran

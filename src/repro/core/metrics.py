@@ -164,6 +164,74 @@ class ServeStats:
                 f"latency~{self.latency_s.value * 1e3:.1f}ms")
 
 
+@dataclass
+class FleetStats:
+    """Router-tier telemetry (one per ``serve.router.Router``).
+
+    Same auditable-invariant design as ``ServeStats``, one level up:
+    every submitted request lands in exactly one of completed / failed /
+    a structured-rejection bucket, so ``in_flight`` going to zero means
+    every client future resolved exactly once — across worker deaths,
+    resubmits and duplicate late completions (which are counted, not
+    delivered: the first resolution wins)."""
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0                  # application error from a worker
+    rejected_upstream: int = 0       # worker's structured rejection,
+    #                                  passed through to the client
+    rejected_failure: int = 0        # router-issued: resubmit budget
+    #                                  exhausted, or no alive worker
+    rejected_shutdown: int = 0       # router draining / shut down
+    shed_brownout: int = 0           # best-effort shed while degraded
+    resubmits: int = 0               # requests re-hashed off a dead
+    #                                  worker onto a survivor
+    duplicate_results: int = 0       # late completions for an already-
+    #                                  resolved request (no-op by design)
+    spills: int = 0                  # routed off the affinity worker
+    #                                  because it was backlogged
+    worker_deaths: int = 0           # alive/suspect -> dead transitions
+    worker_suspects: int = 0         # alive -> suspect (missed beats)
+    worker_rejoins: int = 0          # suspect/dead -> alive transitions
+    latency_s: EWMA = field(default_factory=EWMA)
+    latency_q: Percentile = field(default_factory=Percentile)
+
+    @property
+    def in_flight(self) -> int:
+        return (self.submitted - self.completed - self.failed
+                - self.rejected_upstream - self.rejected_failure
+                - self.rejected_shutdown - self.shed_brownout)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "submitted": self.submitted, "completed": self.completed,
+            "failed": self.failed,
+            "rejected_upstream": self.rejected_upstream,
+            "rejected_failure": self.rejected_failure,
+            "rejected_shutdown": self.rejected_shutdown,
+            "shed_brownout": self.shed_brownout,
+            "resubmits": self.resubmits,
+            "duplicate_results": self.duplicate_results,
+            "spills": self.spills,
+            "worker_deaths": self.worker_deaths,
+            "worker_suspects": self.worker_suspects,
+            "worker_rejoins": self.worker_rejoins,
+            "in_flight": self.in_flight,
+            "latency_ewma_s": self.latency_s.value,
+        }
+
+    def row(self) -> str:
+        rejected = (self.rejected_upstream + self.rejected_failure
+                    + self.rejected_shutdown)
+        return (f"fleet: submitted={self.submitted} "
+                f"completed={self.completed} failed={self.failed} "
+                f"rejected={rejected} brownout={self.shed_brownout} "
+                f"resubmits={self.resubmits} "
+                f"duplicates={self.duplicate_results} "
+                f"spills={self.spills} deaths={self.worker_deaths} "
+                f"rejoins={self.worker_rejoins} "
+                f"latency~{self.latency_s.value * 1e3:.1f}ms")
+
+
 @dataclass(frozen=True)
 class HybridResult:
     workload: str

@@ -65,6 +65,35 @@ class FailureInjector:
 
 
 @dataclass(frozen=True)
+class ProcFault:
+    """One scripted *process-level* fault against a fleet worker, at
+    ``t`` seconds after ``arm()``.  Where ``LaneFault`` degrades a
+    device lane inside one scheduler, a ``ProcFault`` takes out the
+    whole worker process behind the fleet router.
+
+    kind:
+      ``kill9``   — SIGKILL the worker (in-process fakes cut their
+                    transport); no goodbye, the router must *detect* it.
+      ``stall``   — SIGSTOP for ``duration_s`` (SIGCONT after): the
+                    process is alive but wedged — heartbeats stop, the
+                    router's suspect/dead machinery takes over.
+      ``slow``    — worker delivers results ``factor`` x late for
+                    ``duration_s`` (backlog builds; spill territory).
+      ``restart`` — relaunch the worker's transport (revive after a
+                    ``kill9``); it rejoins on its first heartbeat.
+    """
+    t: float
+    worker: str
+    kind: str
+    duration_s: float = 0.0
+    factor: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in ("kill9", "stall", "slow", "restart"):
+            raise ValueError(f"unknown proc fault kind {self.kind!r}")
+
+
+@dataclass(frozen=True)
 class LaneFault:
     """One scripted lane fault, at ``t`` seconds after ``arm()``.
 
@@ -101,19 +130,27 @@ class ChaosInjector:
     lazily armed on first use otherwise).  The scheduler polls
     ``at_time`` for lane-state transitions (kill/revive, each delivered
     exactly once) and asks ``exec_fault`` at execution start for the
-    active execution-level fault on a lane, if any.
+    active execution-level fault on a lane, if any.  The fleet router
+    polls ``at_time_proc`` the same way for scripted ``ProcFault``s
+    against whole worker processes (the fault list may mix both kinds).
 
     Deterministic given the same timeline: flaky draws use a seeded RNG.
     """
 
-    def __init__(self, faults: Sequence[LaneFault],
+    def __init__(self, faults: Sequence[object],
                  clock: Callable[[], float] = time.monotonic,
                  seed: int = 0):
-        self.faults: List[LaneFault] = sorted(faults, key=lambda f: f.t)
+        self.faults: List[LaneFault] = sorted(
+            (f for f in faults if isinstance(f, LaneFault)),
+            key=lambda f: f.t)
+        self.proc_faults: List[ProcFault] = sorted(
+            (f for f in faults if isinstance(f, ProcFault)),
+            key=lambda f: f.t)
         self.clock = clock
         self._rng = random.Random(seed)
         self._t0: Optional[float] = None
         self._emitted: Set[int] = set()
+        self._emitted_proc: Set[int] = set()
         self._lock = threading.Lock()
 
     def arm(self, t0: Optional[float] = None) -> None:
@@ -127,10 +164,6 @@ class ChaosInjector:
             if self._t0 is None:
                 self._t0 = self.clock()
             return self.clock() - self._t0
-
-    def at_step(self, step: int):
-        """Step-schedule compat no-op (faults here are time-based)."""
-        return None, None
 
     def at_time(self, now: Optional[float] = None
                 ) -> Tuple[List[str], List[str]]:
@@ -151,6 +184,21 @@ class ChaosInjector:
                     self._emitted.add(i)
                     revives.append(f.lane)
         return kills, revives
+
+    def at_time_proc(self, now: Optional[float] = None
+                     ) -> List[ProcFault]:
+        """Process-level faults newly due since the last call, in
+        script order.  Each is emitted exactly once; the router applies
+        them to worker transports (SIGKILL/SIGSTOP/slow/restart)."""
+        del now
+        e = self._elapsed()
+        due: List[ProcFault] = []
+        with self._lock:
+            for i, f in enumerate(self.proc_faults):
+                if f.t <= e and i not in self._emitted_proc:
+                    self._emitted_proc.add(i)
+                    due.append(f)
+        return due
 
     def exec_fault(self, lane: str,
                    now: Optional[float] = None) -> Optional[LaneFault]:

@@ -116,7 +116,16 @@ def run_stream(cfg, params, args) -> None:
         print(f"engine {name}: prefill={plan.prefill_group} "
               f"decode={plan.decode_group} "
               f"disaggregated={plan.disaggregated}")
-    print(sched.stats.row())
+    # fault-tolerance counters: a clean run prints all zeros, which is
+    # itself the signal — nonzero retries/failovers under a healthy
+    # fleet mean a lane is flapping
+    st = sched.stats
+    print(f"ft: retries={st.retries} failovers={st.failovers} "
+          f"lane_deaths={st.lane_deaths} revivals={st.lane_revivals} "
+          f"hedges={st.hedges}/{st.hedge_wins} "
+          f"watchdog={st.watchdog_timeouts} "
+          f"brownout_shed={st.shed_brownout}")
+    print(st.row())
 
 
 def main(argv=None):

@@ -27,7 +27,9 @@ from typing import Callable, List, Optional
 class Rejection:
     """Structured admission-control verdict attached to a rejected
     future: ``reason`` is machine-readable ("queue_full" | "deadline" |
-    "shutdown" | "lane_failure" | "brownout"), the rest is enough
+    "shutdown" | "lane_failure" | "brownout" | "worker_failure" — the
+    last issued by the fleet router when a whole worker process dies
+    and the resubmit budget is spent), the rest is enough
     context for a client to back off intelligently (retry after the
     queue drains vs drop the request vs downgrade to best-effort
     later)."""

@@ -42,6 +42,11 @@ def _join_hybrid_threads():
     instead of letting the *next* test fail mysteriously."""
     yield
     try:
+        from repro.serve import router as _router
+        _router.shutdown_all(timeout=10.0)   # routers own worker scheds
+    except ImportError:
+        pass
+    try:
         from repro.serve import scheduler as _sched
         _sched.shutdown_all(timeout=10.0)
     except ImportError:

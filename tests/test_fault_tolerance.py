@@ -8,18 +8,23 @@ calibration pre-seeded so watchdog deadlines derive from small,
 deterministic projected spans; the chaos injector is tested as pure
 data with a fake clock.
 """
+import json
+import os
+import subprocess
+import sys
 import time
 from dataclasses import dataclass
 from types import SimpleNamespace
 
 import pytest
 
-from repro.core.calibration import (clear_calibration_cache,
+from repro.core.calibration import (CalibrationCache,
+                                    clear_calibration_cache,
                                     get_calibration_cache)
 from repro.core.hybrid_executor import DeviceGroup, HybridExecutor
 from repro.core.metrics import Percentile
 from repro.ft.failure import (ChaosInjector, FailureInjector, LaneFailure,
-                              LaneFault)
+                              LaneFault, ProcFault)
 from repro.serve.request_queue import (Request, RequestQueue,
                                        RequestRejected)
 from repro.serve.scheduler import Scheduler
@@ -346,7 +351,30 @@ def test_chaos_at_time_emits_each_transition_exactly_once():
     t["now"] = 102.5
     assert inj.at_time() == ([], ["a"])
     assert inj.at_time() == ([], [])
-    assert inj.at_step(7) == (None, None)  # step-schedule compat no-op
+    # the step-schedule compat shim is gone: time-based injectors no
+    # longer masquerade as step-indexed ones (scheduler guards hasattr)
+    assert not hasattr(inj, "at_step")
+
+
+def test_proc_fault_validates_kind_and_emits_exactly_once():
+    with pytest.raises(ValueError):
+        ProcFault(t=0.0, worker="w0", kind="explode")
+    t = {"now": 100.0}
+    inj = ChaosInjector([
+        ProcFault(t=1.0, worker="w0", kind="kill9"),
+        LaneFault(t=1.5, lane="a", kind="kill"),
+        ProcFault(t=2.0, worker="w0", kind="restart"),
+    ], clock=lambda: t["now"])
+    inj.arm()
+    assert inj.at_time_proc() == []
+    t["now"] = 101.2
+    assert [f.kind for f in inj.at_time_proc()] == ["kill9"]
+    assert inj.at_time_proc() == []        # once, not re-emitted
+    t["now"] = 102.5
+    # lane and proc faults script together but emit on separate tracks
+    assert inj.at_time() == (["a"], [])
+    assert [f.kind for f in inj.at_time_proc()] == ["restart"]
+    assert inj.at_time_proc() == []
 
 
 def test_chaos_exec_fault_kill_until_revive_and_windows():
@@ -429,6 +457,44 @@ def test_mark_group_stale_shrinks_to_surviving_peers():
                               tau_s=300.0)
     assert other == pytest.approx(1e-3, rel=0.01)   # survivor untouched
     assert not cache.warmed_in_process("wl", "host")
+
+
+def test_mark_group_stale_persists_to_fresh_process(tmp_path):
+    """A staleness mark must survive the disk round-trip: a FRESH
+    process loading the shared store after a lane death must also see
+    the dead lane's estimates shrunk toward the survivors — otherwise
+    fleet workers that never witnessed the death keep placing by
+    pre-death numbers off the shared ``JsonStore``."""
+    path = str(tmp_path / "calib.json")
+    cache = CalibrationCache(path=path)
+    cache.put("wl", "accel", 1e-3)
+    cache.put("wl", "host", 8e-3)
+    cache.mark_group_stale("host")     # lane death
+    cache.flush()                      # marks defer; share the store now
+    t0 = time.time()                   # pinned clock: the child's import
+    # latency (seconds of jax under load) must not age the fresh entry
+
+    child = (
+        "import json\n"
+        "from repro.core.calibration import get_calibration_cache\n"
+        "c = get_calibration_cache()\n"
+        f"now = {t0!r}\n"
+        "print('RESULT' + json.dumps({\n"
+        "    'host': c.get_decayed('wl', 'host', now=now,\n"
+        "                          peers=[('accel', 1.0)], tau_s=300.0),\n"
+        "    'accel': c.get_decayed('wl', 'accel', now=now,\n"
+        "                           peers=[('host', 1.0)], tau_s=300.0),\n"
+        "    'warm': c.warmed_in_process('wl', 'host')}))\n")
+    env = dict(os.environ, REPRO_CALIB_CACHE=path)
+    out = subprocess.run([sys.executable, "-c", child], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("RESULT")][-1]
+    got = json.loads(line[len("RESULT"):])
+    assert got["host"] == pytest.approx(1e-3, rel=0.05)   # fully shrunk
+    assert got["accel"] == pytest.approx(1e-3, rel=0.01)  # untouched
+    assert got["warm"] is False        # disk entries never skip warmup
 
 
 # ---------------------------------------------------------------------------

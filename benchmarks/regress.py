@@ -67,9 +67,12 @@ def check(rows, threshold: float, min_delta_us: float = 100.0,
     (compile-time noise); serving/* rows use ``serving_threshold`` and
     a 20 ms minimum delta (queueing-tail noise).  serving ratio/count
     rows (``p95_ratio``, ``cold_probe``, ``chaos_ratio``,
-    ``fleet_ratio``, ``fleet_cold_probe``) are informational — a
-    bigger ratio is *better*, so they never gate; the chaos/fleet
-    goodput/p95 rows gate via the normal serving/* rules."""
+    ``fleet_ratio``, ``fleet_cold_probe``) and the ``serving/obs_*``
+    placement-audit/utilization rows are informational — ratios are
+    higher-is-better, audit rows are diagnostics with no better
+    direction — so they never gate; the chaos/fleet goodput/p95 rows
+    and the ``serving/trace_overhead_*`` row gate via the normal
+    serving/* rules."""
     by_name = {}
     for row in rows:                      # file order == append order
         key = (row.get("backend", "?"), row["name"])
@@ -80,8 +83,10 @@ def check(rows, threshold: float, min_delta_us: float = 100.0,
         if name.startswith(("serving/p95_ratio", "serving/cold_probe",
                             "serving/lm_ratio", "serving/chaos_ratio",
                             "serving/fleet_ratio",
-                            "serving/fleet_cold_probe")):
-            continue                      # higher-is-better / count rows
+                            "serving/fleet_cold_probe",
+                            "serving/obs_")):
+            continue                      # higher-is-better / count /
+            #                               diagnostic audit rows
         if name.startswith("serving/") and ("_fifo_" in name
                                             or "_mono_" in name):
             # baseline rows: the FIFO lane and the monolithic LM

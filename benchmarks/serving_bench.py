@@ -83,6 +83,8 @@ FULL13_VERSION = "f1"
 CHAOS_VERSION = "c1"
 # Fleet scenario (router over K worker processes, kill-one-of-K).
 FLEET_VERSION = "ft1"
+# Observability rows (tracing overhead gate + informational audit).
+OBS_VERSION = "o1"
 
 
 def _mix(smoke: bool):
@@ -296,6 +298,7 @@ def drive(policy: str, trace, max_batch: int = 8,
         else time.perf_counter() - t0
     sched.drain(timeout=60)
     st = sched.stats
+    audit = sched.audit.summary()
     sched.shutdown()
     arr = np.asarray(sorted(lat)) if lat else np.asarray([0.0])
     # the accounting invariant: nothing vanishes without a rejection
@@ -319,6 +322,7 @@ def drive(policy: str, trace, max_batch: int = 8,
         "lane_deaths": st.lane_deaths, "lane_revivals": st.lane_revivals,
         "rejected_failure": st.rejected_failure, "hedges": st.hedges,
         "dropped_without_rejection": st.submitted - accounted,
+        "audit": audit,
     }
 
 
@@ -391,6 +395,135 @@ def two_process_check(verbose: bool = True):
         print(f"serving/cold_probe_runs_procB,{b['probe_runs']:.0f},"
               f"target=0_zero_probe_persisted_calibration")
     return a["probe_runs"], b["probe_runs"]
+
+
+# ---------------------------------------------------------------------------
+# observability: tracing overhead A/B + placement-audit rows (PR 9)
+# ---------------------------------------------------------------------------
+def run_obs(smoke: bool, mix, base_rate: float):
+    """Tracing-overhead contract + placement-audit rows.
+
+    Drives the SAME trace twice through the cost scheduler — recorder
+    disabled, then enabled — and gates traced p50 <= 1.05x untraced
+    (best of 3 bounded attempts: two short open-loop p50s on a busy box
+    jitter more than the few-us/event recording cost under test).  The
+    disabled pass doubles as the ``REPRO_TRACE=0`` no-op check: zero
+    events may land in the buffer while ``enabled`` is off.  The traced
+    run's placement audit becomes the informational ``serving/obs_*``
+    rows: projected-vs-actual error per decision kind and measured
+    per-lane utilization (the paper's §6 resource-efficiency figure).
+    Returns (rows, results, failures)."""
+    from repro.obs import get_recorder
+
+    rec = get_recorder()
+    n = 32 if smoke else 48
+    trace = make_trace(0.5 * base_rate, n, mix, seed=17)
+    was_enabled = rec.enabled
+    ratio = float("inf")
+    traced = untraced = None
+    noop_ok = True
+    dropped = 0
+    try:
+        for attempt in range(3):
+            rec.enabled = False
+            rec.clear()
+            u = drive("cost", trace)
+            noop_ok = noop_ok and len(rec) == 0
+            rec.enabled = True
+            t = drive("cost", trace)
+            dropped += (u["dropped_without_rejection"]
+                        + t["dropped_without_rejection"])
+            r = t["p50_ms"] / max(u["p50_ms"], 1e-9)
+            if r < ratio:
+                ratio, traced, untraced = r, t, u
+            if ratio <= 1.05:
+                break
+    finally:
+        rec.enabled = was_enabled
+    n_events = len(rec)
+
+    audit = traced.get("audit") or {}
+    placements = audit.get("placements", {})
+    util = audit.get("lane_utilization", {})
+    eff = audit.get("resource_efficiency", 0.0)
+    n_closed = sum(v["n"] for v in placements.values())
+    mean_abs_us = (sum(v["mean_abs_err_s"] * v["n"]
+                       for v in placements.values())
+                   / max(n_closed, 1)) * 1e6
+    mean_rel = (sum(v["mean_rel_err"] * v["n"]
+                    for v in placements.values())
+                / max(n_closed, 1))
+    per_kind = "|".join(
+        f"{k}:rel={v['mean_rel_err']:.2f}x(n={v['n']})"
+        for k, v in sorted(placements.items()))
+    per_lane = "|".join(f"{lane}={frac:.2f}"
+                        for lane, frac in sorted(util.items()))
+    rows = [
+        # gated (normal serving/* regress rules): the overhead contract
+        f"serving/trace_overhead_p50_{OBS_VERSION},"
+        f"{traced['p50_ms'] * 1e3:.0f},"
+        f"untraced_p50={untraced['p50_ms']:.1f}ms|ratio={ratio:.3f}x|"
+        f"target<=1.05|noop={'ok' if noop_ok else 'VIOLATED'}|"
+        f"events={n_events}",
+        # informational: cost-model honesty + lane busy fractions
+        f"serving/obs_placement_err_{OBS_VERSION},{mean_abs_us:.0f},"
+        f"mean_abs_err_us|mean_rel={mean_rel:.2f}x|n={n_closed}|"
+        f"{per_kind or 'no_closed_decisions'}",
+        f"serving/obs_resource_efficiency_{OBS_VERSION},"
+        f"{eff * 1e6:.0f},"
+        f"mean_lane_busy_frac={eff:.3f}|{per_lane or 'no_lanes'}",
+    ]
+    results = {"trace_overhead_ratio": ratio, "noop_ok": noop_ok,
+               "events": n_events, "traced": traced,
+               "untraced": untraced, "audit": audit,
+               "dropped_without_rejection": dropped}
+    failures = []
+    if ratio > 1.05:
+        failures.append(f"obs: traced p50 is {ratio:.3f}x untraced "
+                        f"(overhead contract <=1.05x)")
+    if not noop_ok:
+        failures.append("obs: recorder buffered events while disabled "
+                        "(REPRO_TRACE=0 must be a no-op)")
+    if n_closed == 0:
+        failures.append("obs: placement audit closed zero decisions "
+                        "(record/stamp never paired)")
+    return rows, results, failures
+
+
+def _validate_fleet_trace(path: str, killed: str):
+    """Scan an exported fleet trace for requests that demonstrably
+    crossed the worker death: one ``trace_id`` with (a) a span recorded
+    ON the killed worker (shipped via heartbeat before the SIGKILL),
+    (b) a ``failover_resubmit`` instant at the router, and (c) a
+    completion NOT on the killed worker.  Returns (crossed_count,
+    total_events)."""
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents", [])
+    pid_name = {e["pid"]: e["args"]["name"] for e in events
+                if e.get("ph") == "M" and e.get("name") == "process_name"}
+    on_killed, resubmitted, done_elsewhere = set(), set(), set()
+    for e in events:
+        if e.get("ph") == "M":
+            continue
+        tid = (e.get("args") or {}).get("trace_id")
+        if tid is None:
+            continue
+        proc = pid_name.get(e.get("pid"), "")
+        if proc == killed:
+            on_killed.add(tid)
+        if e["name"] == "failover_resubmit":
+            resubmitted.add(tid)
+        # completion evidence off the dead worker: the survivor's own
+        # resolve span (shipped via its heartbeat) or the router-side
+        # ok result whose args name a different worker
+        if e["name"] == "resolve" and proc not in ("", killed):
+            done_elsewhere.add(tid)
+        if (e["name"] == "result" and e["args"].get("ok")
+                and e["args"].get("worker") != killed):
+            done_elsewhere.add(tid)
+    crossed = on_killed & resubmitted & done_elsewhere
+    return len(crossed), len(events)
 
 
 # ---------------------------------------------------------------------------
@@ -638,7 +771,7 @@ def fleet_cold_join_check(mix, verbose: bool = True):
     return probes_a, probes_b
 
 
-def run_fleet(smoke: bool, mix=None):
+def run_fleet(smoke: bool, mix=None, trace_path=None):
     """K worker processes behind the consistent-hash router; kill 1 of
     K mid-trace (SIGKILL, no goodbye), restart it later, and compare
     against the identical no-fault fleet run.  Gates (every attempt):
@@ -646,10 +779,15 @@ def run_fleet(smoke: bool, mix=None):
     death detected and its pending work resubmitted; goodput >= 0.6x
     the no-fault run (best of 3 bounded paired attempts — same
     bistable-short-trace caveat as ``run_chaos``); plus the cold-join
-    zero-probe check.  Returns (rows, results, failures)."""
+    zero-probe check.  ``trace_path`` exports the chaos run's stitched
+    Chrome trace and additionally gates that at least one request
+    demonstrably crossed the worker death (spans on the killed worker,
+    a failover resubmit, completion elsewhere — one trace_id).
+    Returns (rows, results, failures)."""
     import tempfile
 
     from repro.ft.failure import ChaosInjector, ProcFault
+    from repro.obs import get_recorder
     from repro.serve.transport import _env_float
 
     mix = mix or _mix(smoke)
@@ -683,6 +821,10 @@ def run_fleet(smoke: bool, mix=None):
 
         rc = _fleet_router(k, store)
         _broadcast_warm(rc, mix)
+        if trace_path:
+            # a clean buffer per attempt: the export after the loop
+            # holds exactly one chaos replay's stitched timeline
+            get_recorder().clear()
         inj = ChaosInjector([
             ProcFault(t=t_kill, worker=f"fw{k - 1}", kind="kill9"),
             ProcFault(t=t_restart, worker=f"fw{k - 1}", kind="restart"),
@@ -706,6 +848,19 @@ def run_fleet(smoke: bool, mix=None):
             base, chaos, ratio = b, c, r
         if ratio >= 0.6 and chaos["worker_deaths"] >= 1 and rejoined:
             break
+
+    trace_failures = []
+    if trace_path:
+        n_ev = get_recorder().export_chrome(trace_path)
+        crossed, total = _validate_fleet_trace(trace_path,
+                                               killed=f"fw{k - 1}")
+        print(f"# fleet trace -> {trace_path} ({n_ev} events, "
+              f"{crossed} trace_id(s) crossed the worker death)")
+        if crossed < 1:
+            trace_failures.append(
+                "fleet: exported trace shows no request crossing the "
+                "worker death (killed-worker span + failover_resubmit "
+                "+ completion elsewhere under one trace_id)")
 
     rows = [
         f"serving/fleet_goodput_{FLEET_VERSION},"
@@ -744,6 +899,7 @@ def run_fleet(smoke: bool, mix=None):
         failures.append(f"fleet: goodput under worker death only "
                         f"{ratio:.2f}x the no-fault fleet "
                         f"(target >=0.6)")
+    failures += trace_failures
 
     probes_a, probes_b = fleet_cold_join_check(mix)
     results["cold_join"] = {"workerA_probes": probes_a,
@@ -931,7 +1087,8 @@ def run_lm(smoke: bool, cold_check: bool = True):
 
 # ---------------------------------------------------------------------------
 def run(smoke: bool = False, json_out: bool = False,
-        n_requests: int = 0, two_process: bool = True):
+        n_requests: int = 0, two_process: bool = True,
+        trace_path: str = ""):
     mix = _mix(smoke)
     n_requests = n_requests or (96 if smoke else 90)
     t_service, capacity = _warm_and_measure(mix)
@@ -1015,6 +1172,12 @@ def run(smoke: bool = False, json_out: bool = False,
                 f"{ratio_at_max * 1e6:.0f},"
                 f"fifo_p95/sched_p95={ratio_at_max:.2f}x|target>=1.2")
     results["p95_ratio_at_max"] = ratio_at_max
+
+    # --- observability: tracing overhead + placement audit (PR 9) ---
+    obs_rows, obs_results, obs_failures = run_obs(smoke, mix, base_rate)
+    rows += obs_rows
+    results["obs"] = obs_results
+    dropped_total += obs_results["dropped_without_rejection"]
 
     # --- the full Table-1 set: all 13 workloads under one policy ---
     from repro.workloads import ALL_WORKLOADS
@@ -1124,7 +1287,7 @@ def run(smoke: bool = False, json_out: bool = False,
               f"{full['probe_runs']} probe run(s); cost-term priors "
               f"must cover every Table-1 workload")
         ok = False
-    for msg in chaos_failures + fleet_failures + lm_failures:
+    for msg in obs_failures + chaos_failures + fleet_failures + lm_failures:
         print(f"serving_bench: FAIL — {msg}")
         ok = False
     # the latency win needs real parallel lanes: on a single device
@@ -1151,6 +1314,10 @@ def run(smoke: bool = False, json_out: bool = False,
     elif smoke and n_dev < 2:
         print(f"serving_bench: note — single device ({n_dev}), p95 ratio "
               f"informational only")
+    if trace_path:
+        from repro.obs import get_recorder
+        n_ev = get_recorder().export_chrome(trace_path)
+        print(f"# trace -> {trace_path} ({n_ev} events)")
     print(f"serving_bench: {'PASS' if ok else 'FAIL'} "
           f"(p95 ratio at max rate {ratio_at_max:.2f}x, "
           f"dropped_without_rejection={dropped_total})")
@@ -1170,6 +1337,11 @@ if __name__ == "__main__":
     ap.add_argument("--fleet", action="store_true",
                     help="run only the fleet (router + K worker "
                          "processes) chaos scenario")
+    ap.add_argument("--trace", type=str, default="", metavar="PATH",
+                    help="export the run's span timeline as Chrome "
+                         "trace-event JSON (with --fleet: the stitched "
+                         "cross-worker chaos trace, plus a gate that "
+                         "one request crossed the worker death)")
     args = ap.parse_args()
     if args.chaos:
         c_rows, _, c_failures = run_chaos(smoke=args.smoke)
@@ -1181,7 +1353,8 @@ if __name__ == "__main__":
               f"(chaos scenario)")
         sys.exit(0 if not c_failures else 1)
     if args.fleet:
-        f_rows, _, f_failures = run_fleet(smoke=args.smoke)
+        f_rows, _, f_failures = run_fleet(smoke=args.smoke,
+                                          trace_path=args.trace or None)
         for row in f_rows:
             print(row)
         for msg in f_failures:
@@ -1191,5 +1364,6 @@ if __name__ == "__main__":
         sys.exit(0 if not f_failures else 1)
     ok, _ = run(smoke=args.smoke, json_out=args.json,
                 n_requests=args.n_requests,
-                two_process=not args.no_two_process)
+                two_process=not args.no_two_process,
+                trace_path=args.trace)
     sys.exit(0 if ok else 1)

@@ -77,6 +77,12 @@ class ExecutionTrace:
     steals: int
     n_chunks: int
     mode: str                        # "threads" | "virtual" | "sequential"
+    # monotonic wall clock at call start: lets observers (the tracing
+    # layer) re-anchor the records' call-relative t_start/t_end onto a
+    # shared timeline.  "threads" records are wall-relative; "virtual"
+    # records carry simulated clocks — still anchored here, flagged by
+    # ``mode`` so a viewer knows the span positions are modeled.
+    t_base: float = 0.0
 
 
 def make_chunks(units_per_group: Sequence[int], group_names: Sequence[str],
@@ -277,6 +283,7 @@ class AsyncChunkExecutor:
         clocks: Dict[str, float] = {n: 0.0 for n in names}
         busy: Dict[str, float] = {n: 0.0 for n in names}
         units_done: Dict[str, int] = {n: 0 for n in names}
+        t_base = time.monotonic()
 
         def account(group: str, chunk: Chunk, out: object, t0: float,
                     dt: float, stolen: bool) -> None:
@@ -309,7 +316,8 @@ class AsyncChunkExecutor:
             chunks=[chunks_by_seq[s] for s in ordered],
             records=records, group_busy=busy, group_end=group_end,
             group_units=units_done, makespan=makespan,
-            steals=sched.steals, n_chunks=n_chunks, mode=mode)
+            steals=sched.steals, n_chunks=n_chunks, mode=mode,
+            t_base=t_base)
 
     # ------------------------------------------------------------------
     def _chunk_time(self, group, chunk, raw_elapsed: float) -> float:

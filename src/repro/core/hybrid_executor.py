@@ -48,6 +48,7 @@ from repro.core.async_executor import (AsyncChunkExecutor, ExecutionTrace,
 from repro.core.calibration import (ThroughputTracker,
                                     get_calibration_cache, measure)
 from repro.core.metrics import HybridResult
+from repro.obs import get_recorder
 
 
 @dataclass
@@ -389,6 +390,7 @@ class HybridExecutor:
                                     trusted_priors=trusted)
         finally:
             self._async.steal = saved_steal
+        self._trace_chunks(workload, trace)
 
         if do_warmup:
             combine(list(trace.outputs))     # warm merge-path compiles too
@@ -446,6 +448,29 @@ class HybridExecutor:
                            mode=trace.mode,
                            analytic_observed_time=analytic_obs)
         return WorkSharedOutput(value, res, plan, self.simulated, trace)
+
+    @staticmethod
+    def _trace_chunks(workload: str, trace: ExecutionTrace) -> None:
+        """Per-chunk spans + steal instants for the tracing layer.
+
+        Emitted post-hoc from the execution records (no per-chunk hook
+        in the hot worker loop): records carry call-relative times, so
+        ``trace.t_base`` re-anchors them onto the recorder's monotonic
+        timeline.  Virtual-mode spans are positioned by the simulated
+        clocks — flagged in args so a viewer knows they are modeled."""
+        rec = get_recorder()
+        if not rec.enabled or not trace.records:
+            return
+        for r in trace.records:
+            track = f"hybrid:{r.group}"
+            rec.complete("chunk", "exec", trace.t_base + r.t_start,
+                         trace.t_base + r.t_end, track,
+                         workload=workload, units=r.chunk.units,
+                         seq=r.chunk.seq, owner=r.chunk.owner,
+                         stolen=r.stolen, mode=trace.mode)
+            if r.stolen:
+                rec.instant("steal", "exec", track, workload=workload,
+                            seq=r.chunk.seq, owner=r.chunk.owner)
 
     # ------------------------------------------------------------------
     def run_single(self, group_name: str, fn: Callable[[], object]

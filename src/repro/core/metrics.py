@@ -13,10 +13,24 @@ request dropped *without* a structured rejection is a bug, not load).
 """
 from __future__ import annotations
 
+import os
 import threading
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence
+
+
+def _pctl_window(default: int = 256) -> int:
+    """Ring size for ``Percentile`` (``REPRO_SERVE_PCTL_WINDOW``).
+
+    Bigger windows stabilize p99 at high arrival rates (256 samples
+    undersizes the full-13 mix) at the cost of a sorted copy per
+    quantile read — see serve/README.md's knob table."""
+    try:
+        return max(int(os.environ.get("REPRO_SERVE_PCTL_WINDOW",
+                                      str(default))), 16)
+    except ValueError:
+        return default
 
 
 class EWMA:
@@ -52,8 +66,9 @@ class Percentile:
     reads.  EWMAs hide the tail; hedging keys off p99 service time, so
     the scheduler keeps the last ``maxlen`` raw samples instead."""
 
-    def __init__(self, maxlen: int = 256):
-        self._buf: deque = deque(maxlen=maxlen)
+    def __init__(self, maxlen: Optional[int] = None):
+        self._buf: deque = deque(maxlen=_pctl_window()
+                                 if maxlen is None else maxlen)
         self._lock = threading.Lock()
 
     def observe(self, x: float) -> None:
@@ -76,8 +91,14 @@ class Percentile:
 
 @dataclass
 class ServeStats:
-    """Scheduler load telemetry.  Counters are written under the
-    scheduler's lock; the EWMAs are internally thread-safe."""
+    """Scheduler load telemetry.  Counter increments and ``snapshot()``
+    both hold the stats object's own ``lock`` (a *leaf* lock: never
+    acquire a scheduler/router lock while holding it), so a concurrent
+    snapshot can't observe a torn multi-field update and the
+    ``in_flight`` invariant audit is exact.  The EWMAs are internally
+    thread-safe."""
+    lock: threading.RLock = field(default_factory=threading.RLock,
+                                  repr=False, compare=False)
     submitted: int = 0
     completed: int = 0
     failed: int = 0                  # execution raised; future rejected
@@ -115,14 +136,26 @@ class ServeStats:
     service_q: Percentile = field(default_factory=Percentile)
     #                                  raw service-time tail (hedge p99)
 
+    def inc(self, **deltas: int) -> None:
+        """Atomic multi-counter increment under the leaf lock — the
+        one write path, so a snapshot never sees half an update."""
+        with self.lock:
+            for k, v in deltas.items():
+                setattr(self, k, getattr(self, k) + v)
+
     @property
     def in_flight(self) -> int:
-        return (self.submitted - self.completed - self.failed
-                - self.rejected_full - self.rejected_shutdown
-                - self.rejected_failure - self.shed_deadline
-                - self.shed_brownout)
+        with self.lock:
+            return (self.submitted - self.completed - self.failed
+                    - self.rejected_full - self.rejected_shutdown
+                    - self.rejected_failure - self.shed_deadline
+                    - self.shed_brownout)
 
     def snapshot(self) -> Dict[str, float]:
+        with self.lock:
+            return self._snapshot_locked()
+
+    def _snapshot_locked(self) -> Dict[str, float]:
         return {
             "submitted": self.submitted, "completed": self.completed,
             "failed": self.failed, "rejected_full": self.rejected_full,
@@ -173,7 +206,11 @@ class FleetStats:
     a structured-rejection bucket, so ``in_flight`` going to zero means
     every client future resolved exactly once — across worker deaths,
     resubmits and duplicate late completions (which are counted, not
-    delivered: the first resolution wins)."""
+    delivered: the first resolution wins).  Increments and
+    ``snapshot()`` hold the stats object's own leaf ``lock`` (same
+    torn-read contract as ``ServeStats``)."""
+    lock: threading.RLock = field(default_factory=threading.RLock,
+                                  repr=False, compare=False)
     submitted: int = 0
     completed: int = 0
     failed: int = 0                  # application error from a worker
@@ -195,13 +232,24 @@ class FleetStats:
     latency_s: EWMA = field(default_factory=EWMA)
     latency_q: Percentile = field(default_factory=Percentile)
 
+    def inc(self, **deltas: int) -> None:
+        """Atomic multi-counter increment under the leaf lock."""
+        with self.lock:
+            for k, v in deltas.items():
+                setattr(self, k, getattr(self, k) + v)
+
     @property
     def in_flight(self) -> int:
-        return (self.submitted - self.completed - self.failed
-                - self.rejected_upstream - self.rejected_failure
-                - self.rejected_shutdown - self.shed_brownout)
+        with self.lock:
+            return (self.submitted - self.completed - self.failed
+                    - self.rejected_upstream - self.rejected_failure
+                    - self.rejected_shutdown - self.shed_brownout)
 
     def snapshot(self) -> Dict[str, float]:
+        with self.lock:
+            return self._snapshot_locked()
+
+    def _snapshot_locked(self) -> Dict[str, float]:
         return {
             "submitted": self.submitted, "completed": self.completed,
             "failed": self.failed,

@@ -15,10 +15,16 @@ which places each request (dedicated / work-shared / queued) from the
 cost model, coalesces same-shape arrivals, and sheds what misses
 ``--deadline``.  Prints per-request latency percentiles and the
 scheduler's load telemetry.
+
+``--trace out.json`` exports the run's span timeline as Chrome
+trace-event JSON (open in ``chrome://tracing`` or Perfetto);
+``--stats-json stats.json`` dumps the final ``ServeStats`` snapshot
+plus engine placements as JSON for scripting.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -98,7 +104,24 @@ def run_stream(cfg, params, args) -> None:
     wall = (max(done_at.values()) - t0) if done_at \
         else time.perf_counter() - t0
     placements = dict(sched.engine_placements)
+    audit = sched.audit.summary()
     sched.shutdown()
+    if args.stats_json:
+        snap = sched.stats.snapshot()
+        doc = {"arch": cfg.name, "stats": snap,
+               "placement_audit": audit,
+               "engine_placements": {
+                   name: {"prefill": plan.prefill_group,
+                          "decode": plan.decode_group,
+                          "disaggregated": plan.disaggregated}
+                   for name, plan in placements.items()}}
+        with open(args.stats_json, "w") as fh:
+            json.dump(doc, fh, indent=2, default=str)
+        print(f"stats json -> {args.stats_json}")
+    if args.trace:
+        from repro.obs import get_recorder
+        n = get_recorder().export_chrome(args.trace)
+        print(f"trace -> {args.trace} ({n} events)")
     pct = _percentiles(lat)
     print(f"{cfg.name}: {len(futs)} requests over {wall:.1f}s "
           f"(rate {args.rate}/s), {len(lat)} served, {rejected} "
@@ -151,6 +174,13 @@ def main(argv=None):
                     help="--stream per-request deadline, seconds")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--window-ms", type=float, default=2.0)
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="--stream: export Chrome trace-event JSON of "
+                         "the run's span timeline")
+    ap.add_argument("--stats-json", type=str, default=None,
+                    metavar="PATH",
+                    help="--stream: dump the final ServeStats snapshot "
+                         "+ placement audit as JSON")
     args = ap.parse_args(argv)
 
     cfg = registry.get(args.arch)

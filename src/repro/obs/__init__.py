@@ -1,0 +1,12 @@
+"""Observability: request tracing, lane timelines, placement audit.
+
+This package is intentionally dependency-free within the repo —
+``core``/``serve`` import it, never the other way round — so the
+recorder can be threaded through every layer without import cycles.
+"""
+from repro.obs.tracer import (TraceRecorder, get_recorder, new_trace_id,
+                              trace_enabled)
+from repro.obs.audit import PlacementAudit
+
+__all__ = ["TraceRecorder", "get_recorder", "new_trace_id",
+           "trace_enabled", "PlacementAudit"]

@@ -53,6 +53,8 @@ import threading
 import weakref
 from typing import Callable, Dict, List, Optional
 
+from repro.obs import get_recorder
+
 _LIVE: "weakref.WeakSet[ContinuousEngine]" = weakref.WeakSet()
 
 
@@ -141,6 +143,8 @@ class ContinuousEngine:
         self._step_ctx = step_ctx or (lambda: nullcontext())
         self._hooks = dict(hooks or {})
         self._clock = clock or _time.monotonic
+        self._rec = get_recorder()
+        self._track = f"engine:{_safe(self.workload)}"
         self._cv = threading.Condition()
         self._inbox: collections.deque = collections.deque()
         self._ready: collections.deque = collections.deque()
@@ -184,6 +188,7 @@ class ContinuousEngine:
                     return
                 pending = self._inbox.popleft()
             try:
+                t_p0 = self._rec.now()
                 for lk in self.prefill_locks:
                     lk.acquire()
                 try:
@@ -192,6 +197,11 @@ class ContinuousEngine:
                 finally:
                     for lk in reversed(self.prefill_locks):
                         lk.release()
+                self._rec.complete(
+                    "prefill", "engine", t_p0, self._rec.now(),
+                    self._track,
+                    getattr(pending.req, "trace_id", None),
+                    workload=self.workload, group=self.prefill_group)
                 pending.req.future.meta.setdefault(
                     "t_first_token", self._clock())
                 pending.req.future.meta.setdefault("engine", {
@@ -232,12 +242,20 @@ class ContinuousEngine:
                 self.max_live = max(self.max_live, len(live_now))
                 if cancelled:
                     self._cv.notify_all()
-            if cancelled and "on_cancel" in self._hooks:
-                self._hooks["on_cancel"](len(cancelled))
+            if cancelled:
+                if self._rec.enabled:
+                    for row in cancelled:
+                        self._rec.instant(
+                            "engine_cancel", "engine", self._track,
+                            getattr(row.pending.req, "trace_id", None),
+                            at="join")          # preempted before a slot
+                if "on_cancel" in self._hooks:
+                    self._hooks["on_cancel"](len(cancelled))
             cancelled = []
             if not live_now:
                 continue
 
+            t_s0 = self._rec.now()
             for lk in self.step_locks:
                 lk.acquire()
             try:
@@ -251,8 +269,21 @@ class ContinuousEngine:
             finally:
                 for lk in reversed(self.step_locks):
                     lk.release()
-            if joined and "on_join" in self._hooks:
-                self._hooks["on_join"](len(joined))
+            # span covers lock wait too: lane contention is exactly
+            # what a step timeline should show
+            self._rec.complete("engine_step", "engine", t_s0,
+                               self._rec.now(), self._track,
+                               n_live=len(live_now), joins=len(joined),
+                               group=self.decode_group)
+            if joined:
+                if self._rec.enabled:
+                    for row, _ in joined:
+                        self._rec.instant(
+                            "engine_join", "engine", self._track,
+                            getattr(row.pending.req, "trace_id", None),
+                            slot=row.slot)
+                if "on_join" in self._hooks:
+                    self._hooks["on_join"](len(joined))
             if "on_step" in self._hooks:
                 self._hooks["on_step"](len(live_now))
 
@@ -280,6 +311,17 @@ class ContinuousEngine:
                     self._free.append(row.slot)
                     self.cancellations += 1
                 self._cv.notify_all()
+            if self._rec.enabled:
+                for row in evicted:
+                    self._rec.instant(
+                        "engine_evict", "engine", self._track,
+                        getattr(row.pending.req, "trace_id", None),
+                        slot=row.slot)
+                for row in cancelled:
+                    self._rec.instant(
+                        "engine_cancel", "engine", self._track,
+                        getattr(row.pending.req, "trace_id", None),
+                        at="mid_decode")        # preempted from a slot
             if evicted and "on_evict" in self._hooks:
                 self._hooks["on_evict"](len(evicted))
             if cancelled and "on_cancel" in self._hooks:

@@ -135,6 +135,10 @@ class Request:
     #                     latency-sensitive: eligible for duplication
     hedged: bool = field(compare=False, default=False)
     #                     a duplicate execution has been launched
+    # observability: fleet-unique trace id (repro.obs) — survives
+    # requeues, hedges and router resubmits across fresh req_ids, so
+    # one exported trace stitches a request's whole path
+    trace_id: Optional[str] = field(compare=False, default=None)
 
     def __post_init__(self):
         self.sort_key = (-self.priority, self.req_id)

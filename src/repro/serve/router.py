@@ -64,6 +64,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.metrics import FleetStats
 from repro.ft.failure import HeartbeatMonitor
+from repro.obs import get_recorder, new_trace_id
 from repro.serve.request_queue import (Rejection, RequestRejected,
                                        ServeFuture)
 from repro.serve.transport import SubmitMsg, _env_float
@@ -151,6 +152,9 @@ class _Pending:
     t_deadline: Optional[float]
     worker: str = ""
     retries: int = 0
+    # survives failover: every resubmit gets a fresh wire req_id but
+    # keeps this id, so spans across workers stitch into one trace
+    trace_id: Optional[str] = None
 
 
 @dataclass
@@ -193,6 +197,7 @@ class Router:
         self.clock = clock
         self.chaos = chaos
         self.stats = FleetStats()
+        self._rec = get_recorder()
         self._ring = HashRing(vnodes)
         self._slots: Dict[str, _WorkerSlot] = {}
         self._pending: Dict[int, _Pending] = {}
@@ -286,8 +291,8 @@ class Router:
             if p.fut._reject(RequestRejected(Rejection(
                     "shutdown", p.workload,
                     detail="router shut down"))):
+                self.stats.inc(rejected_shutdown=1)
                 with self._idle:
-                    self.stats.rejected_shutdown += 1
                     self._idle.notify_all()
 
     def __enter__(self) -> "Router":
@@ -343,18 +348,19 @@ class Router:
         fut = ServeFuture()
         now = self.clock()
         key = f"{workload}|{bucket if bucket is not None else default_bucket(payload)}"
+        rec = self._rec
+        trace_id = new_trace_id() if rec.enabled else None
         p = _Pending(fut, workload, payload, key, priority, hedge,
                      t_submit=now,
                      t_deadline=None if deadline is None
-                     else now + max(deadline, 0.0))
+                     else now + max(deadline, 0.0),
+                     trace_id=trace_id)
+        self.stats.inc(submitted=1)
         with self._lock:
-            self.stats.submitted += 1
             if self._draining:
-                self.stats.rejected_shutdown += 1
                 reject = Rejection("shutdown", workload,
                                    detail="router is draining")
             elif priority < 0 and self._degraded_locked():
-                self.stats.shed_brownout += 1
                 reject = Rejection(
                     "brownout", workload,
                     detail="best-effort shed: fleet degraded "
@@ -362,8 +368,17 @@ class Router:
             else:
                 reject = None
         if reject is not None:
+            self.stats.inc(rejected_shutdown=1 if reject.reason
+                           == "shutdown" else 0,
+                           shed_brownout=1 if reject.reason
+                           == "brownout" else 0)
+            rec.instant("brownout" if reject.reason == "brownout"
+                        else "shed", "fault", "router", trace_id,
+                        workload=workload, reason=reject.reason)
             fut._reject(RequestRejected(reject))
             return fut
+        rec.instant("submit", "request", "router", trace_id,
+                    workload=workload)
         self._place(p, deadline_remaining=deadline)
         return fut
 
@@ -400,15 +415,15 @@ class Router:
                         "deadline", p.workload,
                         detail="deadline passed during fleet failover",
                         waited_s=now - p.t_submit))):
+                    self.stats.inc(rejected_upstream=1)
                     with self._idle:
-                        self.stats.rejected_upstream += 1
                         self._idle.notify_all()
                 return
         with self._lock:
             name, spilled = self._pick_worker_locked(p.key)
             if name is not None:
                 if spilled:
-                    self.stats.spills += 1
+                    self.stats.inc(spills=1)
                 rid = next(self._ids)
                 p.worker = name
                 self._pending[rid] = p
@@ -417,14 +432,17 @@ class Router:
             if p.fut._reject(RequestRejected(Rejection(
                     "worker_failure", p.workload,
                     detail="no alive fleet worker"))):
+                self.stats.inc(rejected_failure=1)
                 with self._idle:
-                    self.stats.rejected_failure += 1
                     self._idle.notify_all()
             return
+        self._rec.instant("place", "request", "router", p.trace_id,
+                          workload=p.workload, worker=name, rid=rid,
+                          spilled=spilled, retry=p.retries)
         ok = self._slots[name].handle.submit(SubmitMsg(
             req_id=rid, workload=p.workload, payload=p.payload,
             deadline_s=deadline_remaining, priority=p.priority,
-            hedge=p.hedge))
+            hedge=p.hedge, trace_id=p.trace_id))
         if not ok:
             # the transport is already broken: declare the worker dead
             # now (the monitor would within a tick) — that re-hashes
@@ -441,8 +459,8 @@ class Router:
         if p is None:
             # late completion for a request that failed over (or a
             # duplicate): exactly-once means it is a counted no-op
+            self.stats.inc(duplicate_results=1)
             with self._idle:
-                self.stats.duplicate_results += 1
                 self._idle.notify_all()
             return
         now = self.clock()
@@ -453,17 +471,22 @@ class Router:
         else:
             first = p.fut._reject(RuntimeError(
                 msg.error or "worker execution failed"))
-        with self._idle:
-            if not first:
-                self.stats.duplicate_results += 1
-            elif msg.ok:
+        if first:
+            self._rec.instant("result", "request", "router", p.trace_id,
+                              workload=p.workload, worker=name,
+                              ok=msg.ok, latency_s=now - p.t_submit)
+        if not first:
+            self.stats.inc(duplicate_results=1)
+        elif msg.ok:
+            with self.stats.lock:
                 self.stats.completed += 1
                 self.stats.latency_s.observe(now - p.t_submit)
                 self.stats.latency_q.observe(now - p.t_submit)
-            elif msg.rejection is not None:
-                self.stats.rejected_upstream += 1
-            else:
-                self.stats.failed += 1
+        elif msg.rejection is not None:
+            self.stats.inc(rejected_upstream=1)
+        else:
+            self.stats.inc(failed=1)
+        with self._idle:
             self._idle.notify_all()
 
     def _on_heartbeat(self, name: str, msg) -> None:
@@ -482,9 +505,14 @@ class Router:
                 # it still answers are no-op duplicates.
                 slot.state = "alive"
                 rejoined = True
+        spans = getattr(msg, "spans", ())
+        if spans:
+            # stitch the worker's events onto the fleet timeline; the
+            # prefix becomes the process name in the Chrome export
+            self._rec.ingest(list(spans), track_prefix=f"{name}/")
         if rejoined:
+            self.stats.inc(worker_rejoins=1)
             with self._idle:
-                self.stats.worker_rejoins += 1
                 self._idle.notify_all()
 
     # -- failure detection + failover -----------------------------------
@@ -514,7 +542,7 @@ class Router:
                 with self._idle:
                     if slot.state == "alive":
                         slot.state = "suspect"
-                        self.stats.worker_suspects += 1
+                        self.stats.inc(worker_suspects=1)
                         self._idle.notify_all()
             elif state == "suspect" and age > 2 * self.hb_timeout_s:
                 self._worker_dead(name, "missed heartbeats")
@@ -557,13 +585,15 @@ class Router:
                 return
             slot.state = "dead"
             slot.load = 0.0
-            self.stats.worker_deaths += 1
+            self.stats.inc(worker_deaths=1)
             moved = [(rid, p) for rid, p in self._pending.items()
                      if p.worker == name]
             for rid, _ in moved:
                 del self._pending[rid]
             self._assigned[name] = 0
             self._idle.notify_all()
+        self._rec.instant("worker_dead", "fault", "router",
+                          worker=name, why=why, moved=len(moved))
         for _, p in moved:
             self._resubmit(p, why)
 
@@ -580,11 +610,15 @@ class Router:
                         "worker_failure", p.workload,
                         detail=f"resubmit budget ({self.max_retries}) "
                                f"exhausted: {why}"))):
-                    self.stats.rejected_failure += 1
+                    self.stats.inc(rejected_failure=1)
                     self._idle.notify_all()
                 return
             p.retries += 1
-            self.stats.resubmits += 1
+            self.stats.inc(resubmits=1)
+        self._rec.instant("failover_resubmit", "fault", "router",
+                          p.trace_id, workload=p.workload,
+                          from_worker=p.worker, retry=p.retries,
+                          why=why)
         self._place(p)
 
     def restart_worker(self, name: str) -> None:

@@ -101,6 +101,7 @@ from repro.core.hybrid_executor import (DeviceGroup, HybridExecutor,
                                         detect_platform)
 from repro.core.metrics import ServeStats
 from repro.ft.failure import HeartbeatMonitor, LaneFailure
+from repro.obs import PlacementAudit, get_recorder, new_trace_id
 from repro.serve import continuous
 from repro.serve.placement import (SHARED, GroupLoad, PlacementDecision,
                                    deadline_feasible, degraded_fraction,
@@ -324,6 +325,11 @@ class Scheduler:
         self.max_batch = max(int(max_batch), 1)
         self._queue = RequestQueue(max_queue, clock=clock)
         self.stats = ServeStats()
+        # per-request lifecycle spans + projected-vs-actual placement
+        # audit (repro.obs): the recorder is the process singleton so
+        # fleet workers ship one coherent batch per heartbeat
+        self._rec = get_recorder()
+        self.audit = PlacementAudit(clock=clock)
         self._injector = failure_injector
         self._step = 0
         # -- fault-tolerance knobs --------------------------------------
@@ -468,13 +474,13 @@ class Scheduler:
         for r in self._queue.drain_remaining():
             if r.reject(Rejection(reason, r.workload,
                                   detail="scheduler shut down")):
-                with self._lock:
-                    self.stats.rejected_shutdown += 1
+                self.stats.inc(rejected_shutdown=1)
 
     # -- submission -----------------------------------------------------
     def submit(self, workload: str, payload=None,
                deadline: Optional[float] = None,
-               priority: int = 0, hedge: bool = False) -> ServeFuture:
+               priority: int = 0, hedge: bool = False,
+               trace_id: Optional[str] = None) -> ServeFuture:
         """Enqueue one request.  ``deadline`` is seconds from now; a
         request that cannot (or did not) finish in time resolves with a
         structured ``RequestRejected`` instead of hanging.  Never
@@ -484,24 +490,31 @@ class Scheduler:
         execution runs past the hedge delay the watchdog duplicates it
         on an idle lane and the first result wins.  ``priority < 0``
         marks it best-effort: shed first under brownout (a lane is
-        down and the survivors are absorbing its load)."""
+        down and the survivors are absorbing its load).  ``trace_id``
+        threads an upstream trace through (the fleet router's — a
+        fresh one is minted when absent and tracing is on)."""
         self.start()
+        rec = self._rec
+        if trace_id is None and rec.enabled:
+            trace_id = new_trace_id()
         now = self.clock()
         req = Request(workload=workload, payload=payload,
                       priority=priority, deadline_s=deadline,
                       t_submit=now,
                       t_deadline=None if deadline is None
                       else now + max(deadline, 0.0),
-                      hedge=hedge)
+                      hedge=hedge, trace_id=trace_id)
         with self._lock:
-            self.stats.submitted += 1
+            self.stats.inc(submitted=1)
             if self._draining or self._stopped:
-                self.stats.rejected_shutdown += 1
+                self.stats.inc(rejected_shutdown=1)
                 req.reject(Rejection("shutdown", workload,
                                      detail="scheduler is draining"))
                 return req.future
             if priority < 0 and self._brownout_locked():
-                self.stats.shed_brownout += 1
+                self.stats.inc(shed_brownout=1)
+                rec.instant("brownout", "fault", "sched", trace_id,
+                            workload=workload)
                 req.reject(Rejection(
                     "brownout", workload,
                     detail="best-effort shed: a lane is down and "
@@ -510,17 +523,19 @@ class Scheduler:
         try:
             spec = self._make_spec(workload, payload)
         except Exception as e:
-            with self._lock:
-                self.stats.failed += 1
+            self.stats.inc(failed=1)
             req.future._reject(e)
             return req.future
         req.bucket = spec.bucket or workload
         req.n_units = max(int(spec.total_units), 1)
         req.payload = spec                      # dispatcher reads the spec
+        rec.instant("submit", "request", "sched", trace_id,
+                    workload=workload, req_id=req.req_id)
+        req._t_q0 = rec.now()                   # queue_wait span start
         rej = self._queue.push(req)
         with self._lock:
             if rej is not None:
-                self.stats.rejected_full += 1
+                self.stats.inc(rejected_full=1)
             self.stats.queue_depth.observe(len(self._queue))
         return req.future
 
@@ -535,8 +550,11 @@ class Scheduler:
         while True:
             req, shed = self._queue.pop(timeout=0.1)
             if shed:
+                self.stats.inc(shed_deadline=len(shed))
+                for r in shed:
+                    self._rec.instant("shed", "request", "sched",
+                                      r.trace_id, reason="deadline")
                 with self._idle:
-                    self.stats.shed_deadline += len(shed)
                     self._idle.notify_all()
             if req is None:
                 if self._queue.closed and len(self._queue) == 0:
@@ -610,6 +628,13 @@ class Scheduler:
     def _dispatch(self, batch: List[Request]) -> None:
         self._apply_injection()
         self._step += 1
+        rec = self._rec
+        if rec.enabled:
+            t_pop = rec.now()
+            for r in batch:
+                rec.complete("queue_wait", "request",
+                             getattr(r, "_t_q0", t_pop), t_pop, "sched",
+                             r.trace_id, workload=r.workload)
         specs = [r.payload for r in batch]
         if (self.policy == "cost" and continuous_enabled()
                 and getattr(specs[0], "stepper", None) is not None):
@@ -617,6 +642,7 @@ class Scheduler:
             return
         n_units = sum(max(int(s.total_units), 1) for s in specs)
         now = self.clock()
+        t_p0 = rec.now()
 
         with self._lock:
             loads = [GroupLoad(ld.name,
@@ -644,12 +670,22 @@ class Scheduler:
             for r in batch:
                 if r.reject(Rejection("lane_failure", r.workload,
                                       detail="no alive device group")):
+                    self.stats.inc(rejected_failure=1)
                     with self._idle:
-                        self.stats.rejected_failure += 1
                         self._idle.notify_all()
             return
         decision = self._maybe_explore(specs[0].workload, loads, decision,
                                        n_units, now)
+        if rec.enabled:
+            rec.complete(
+                "placement", "request", t_p0, rec.now(), "sched",
+                batch[0].trace_id, workload=specs[0].workload,
+                kind=decision.kind, groups=list(decision.groups),
+                est_exec_s=decision.est_exec_s,
+                queued_behind_s=decision.queued_behind_s,
+                n_batch=len(batch),
+                alternatives={k: round(v, 6) for k, v
+                              in decision.alternatives.items()})
 
         # deadline-based shedding at admission: members whose deadline
         # the projected completion already misses are rejected now
@@ -665,18 +701,24 @@ class Scheduler:
                            f"deadline {r.deadline_s:.4f}s",
                     deadline_s=r.deadline_s,
                     waited_s=now - r.t_submit)):
+                self.stats.inc(shed_deadline=1)
+                rec.instant("shed", "request", "sched", r.trace_id,
+                            reason="projected_deadline_miss")
                 with self._idle:
-                    self.stats.shed_deadline += 1
                     self._idle.notify_all()
         if not kept:
             return
+        for r in kept:
+            # projected span for the placement audit: resolve stamps
+            # the measured service time against this
+            self.audit.record(r.req_id, r.workload, decision.kind,
+                              decision.est_exec_s, decision.alternatives)
         ex = _Execution([r for r in kept], [r.payload for r in kept],
                         decision, t_dispatch=now,
                         est_span=decision.est_exec_s)
         with self._lock:
             if len(kept) > 1:
-                self.stats.batches += 1
-                self.stats.batched_requests += len(kept)
+                self.stats.inc(batches=1, batched_requests=len(kept))
             for name in decision.groups:
                 ld = self._loads[name]
                 ld.busy_until = max(ld.busy_until, now) + ex.est_span
@@ -737,20 +779,18 @@ class Scheduler:
                 if r.reject(Rejection(
                         "lane_failure", r.workload,
                         detail="no alive device group for engine")):
+                    self.stats.inc(rejected_failure=1)
                     with self._idle:
-                        self.stats.rejected_failure += 1
                         self._idle.notify_all()
             return
-        with self._lock:
-            if len(batch) > 1:
-                self.stats.batches += 1
-                self.stats.batched_requests += len(batch)
+        if len(batch) > 1:
+            self.stats.inc(batches=1, batched_requests=len(batch))
         for r in batch:
             if not eng.submit(r, r.payload, now):
                 if r.reject(Rejection("shutdown", r.workload,
                                       detail="engine shut down")):
+                    self.stats.inc(rejected_shutdown=1)
                     with self._idle:
-                        self.stats.rejected_shutdown += 1
                         self._idle.notify_all()
 
     def _engine_for(self, stepper
@@ -771,20 +811,16 @@ class Scheduler:
                          if g.name == plan.decode_group)
 
             def on_step(n_live):
-                with self._lock:
-                    self.stats.engine_steps += 1
+                self.stats.inc(engine_steps=1)
 
             def on_join(k):
-                with self._lock:
-                    self.stats.engine_joins += k
+                self.stats.inc(engine_joins=k)
 
             def on_evict(k):
-                with self._lock:
-                    self.stats.engine_evictions += k
+                self.stats.inc(engine_evictions=k)
 
             def on_cancel(k):
-                with self._lock:
-                    self.stats.engine_cancellations += k
+                self.stats.inc(engine_cancellations=k)
 
             eng = continuous.ContinuousEngine(
                 stepper,
@@ -822,8 +858,8 @@ class Scheduler:
 
     def _engine_reject(self, req: Request, exc: BaseException) -> None:
         if req.future._reject(exc):
+            self.stats.inc(failed=1)
             with self._idle:
-                self.stats.failed += 1
                 self._idle.notify_all()
 
     def _unit_time(self, spec, group_name: str) -> Optional[float]:
@@ -943,7 +979,9 @@ class Scheduler:
             ld = self._loads.get(name)
             if ld is not None and not ld.alive:
                 ld.alive = True
-                self.stats.lane_revivals += 1
+                self.stats.inc(lane_revivals=1)
+                self._rec.instant("lane_revive", "fault", f"lane:{name}",
+                                  why="suspect lane responsive again")
                 self._idle.notify_all()
 
     @staticmethod
@@ -965,8 +1003,10 @@ class Scheduler:
                                f"lane queue",
                         deadline_s=r.deadline_s,
                         waited_s=now - r.t_submit)):
+                    self.stats.inc(shed_deadline=1)
+                    self._rec.instant("shed", "request", "sched",
+                                      r.trace_id, reason="lane_queue")
                     with self._idle:
-                        self.stats.shed_deadline += 1
                         self._idle.notify_all()
             else:
                 kept.append(i)
@@ -991,8 +1031,7 @@ class Scheduler:
         except Exception:                          # noqa: BLE001
             return None
         if merged is not None:
-            with self._lock:
-                self.stats.merged_batches += 1
+            self.stats.inc(merged_batches=1)
         return merged
 
     def _run_dedicated(self, ex: _Execution, g: DeviceGroup) -> None:
@@ -1004,25 +1043,46 @@ class Scheduler:
         # base spec's units (e.g. sort segments)
         cal_wl = ex.specs[0].workload
         faults = self._lane_faults([g.name])
+        rec = self._rec
+        track = f"lane:{g.name}"
         try:
             with self._device_ctx(g):
                 self._fault_pre(faults)
+                t_m0 = rec.now()
                 merged = self._merge_batch(ex, kept)
                 if merged is not None:
+                    rec.complete("merge", "exec", t_m0, rec.now(), track,
+                                 ex.requests[kept[0]].trace_id,
+                                 n=len(kept), workload=cal_wl)
                     cal_wl = merged.spec.workload
                     ts = self.clock()
+                    t_e0 = rec.now()
                     value = merged.spec.run_one()
+                    t_e1 = rec.now()
                     done_units += max(int(merged.spec.total_units), 1)
+                    rec.complete("lane_exec", "exec", t_e0, t_e1, track,
+                                 ex.requests[kept[0]].trace_id,
+                                 workload=cal_wl, merged=True,
+                                 n=len(kept))
+                    t_d0 = rec.now()
                     for j, i in enumerate(kept):
                         self._resolve(ex.requests[i],
                                       merged.demux(value, j), ts,
                                       hedge=ex.hedge)
+                    rec.complete("demux", "exec", t_d0, rec.now(), track,
+                                 ex.requests[kept[0]].trace_id,
+                                 n=len(kept))
                     kept = []
                 for i in kept:
                     r, spec = ex.requests[i], ex.specs[i]
                     ts = self.clock()
+                    t_e0 = rec.now()
                     value = spec.run_one()
+                    t_e1 = rec.now()
                     done_units += max(int(spec.total_units), 1)
+                    rec.complete("lane_exec", "exec", t_e0, t_e1, track,
+                                 r.trace_id, workload=r.workload,
+                                 hedge=ex.hedge)
                     self._resolve(r, value, ts, hedge=ex.hedge)
             # an injected slowdown stretches elapsed (below) so the
             # slowed time is what calibration learns — survivors'
@@ -1047,12 +1107,18 @@ class Scheduler:
             return
         t0 = self.clock()
         faults = self._lane_faults([g.name for g in self.groups])
+        rec = self._rec
         try:
             self._fault_pre(faults)
             if len(kept) == 1:
+                r = ex.requests[kept[0]]
                 spec = ex.specs[kept[0]]
+                t_e0 = rec.now()
                 value = self._run_shared_single(spec)
-                self._resolve(ex.requests[kept[0]], value, t0)
+                rec.complete("lane_exec", "exec", t_e0, rec.now(),
+                             "lane:shared", r.trace_id,
+                             workload=r.workload, shared=True)
+                self._resolve(r, value, t0)
             else:
                 self._run_shared_batch(ex, kept, t0)
             self._fault_post(faults, self.clock() - t0)
@@ -1070,8 +1136,7 @@ class Scheduler:
                      probe_units=max(spec.total_units // 8, 1),
                      workload=spec.workload,
                      unit_cost=getattr(spec, "unit_cost", None))
-        with self._lock:
-            self.stats.probe_runs += ex.last_probe_runs
+        self.stats.inc(probe_runs=ex.last_probe_runs)
         out = ex.run_work_shared(
             spec.workload, spec.total_units, spec.run_share,
             spec.combine, comm_cost=spec.comm_cost,
@@ -1108,23 +1173,35 @@ class Scheduler:
         # are whole requests, not re-executable slices of one)
         hx.calibrate(lambda g, k: run_share(g, 0, k), probe_units=1,
                      workload=key, unit_cost=uc, probe=False)
+        rec = self._rec
+        t_e0 = rec.now()
         # min_units=1: every live group keeps measuring its own batch
         # throughput (a stale slow estimate must not starve a lane out
         # of the split it would need to correct itself)
         out = hx.run_work_shared(key, len(specs), run_share, combine,
                                  comm_cost=spec0.comm_cost, warmup=False,
                                  min_units=1)
+        rec.complete("lane_exec", "exec", t_e0, rec.now(), "lane:shared",
+                     ex.requests[kept[0]].trace_id, workload=key,
+                     shared=True, n=len(kept))
+        t_d0 = rec.now()
         for j, i in enumerate(kept):
             self._resolve(ex.requests[i], out.value[j], t0)
+        rec.complete("demux", "exec", t_d0, rec.now(), "lane:shared",
+                     ex.requests[kept[0]].trace_id, n=len(kept))
 
     def _resolve(self, req: Request, value, t_start: float,
                  hedge: bool = False) -> None:
         now = self.clock()
         if req.future._resolve(value):
+            # the actual span the placement audit compares against the
+            # decision's projection (no-op for ids it never recorded)
+            self.audit.stamp(req.req_id, now - t_start)
+            self._rec.instant("resolve", "request", "sched",
+                              req.trace_id, workload=req.workload,
+                              service_s=now - t_start, hedge=hedge)
+            self.stats.inc(completed=1, hedge_wins=1 if hedge else 0)
             with self._idle:
-                self.stats.completed += 1
-                if hedge:
-                    self.stats.hedge_wins += 1
                 self.stats.wait_s.observe(t_start - req.t_submit)
                 self.stats.service_s.observe(now - t_start)
                 self.stats.service_q.observe(now - t_start)
@@ -1160,8 +1237,8 @@ class Scheduler:
             if retryable:
                 self._requeue(r, detail)
             elif r.future._reject(e):
+                self.stats.inc(failed=1)
                 with self._idle:
-                    self.stats.failed += 1
                     self._idle.notify_all()
 
     def _requeue(self, r: Request, why: str) -> None:
@@ -1173,7 +1250,7 @@ class Scheduler:
                 if r.reject(Rejection("shutdown", r.workload,
                                       detail=f"not retried ({why}): "
                                              "scheduler stopped")):
-                    self.stats.rejected_shutdown += 1
+                    self.stats.inc(rejected_shutdown=1)
                     self._idle.notify_all()
                 return
             if r.retries >= self.max_retries:
@@ -1181,15 +1258,18 @@ class Scheduler:
                         "lane_failure", r.workload,
                         detail=f"retry budget ({self.max_retries}) "
                                f"exhausted: {why}")):
-                    self.stats.rejected_failure += 1
+                    self.stats.inc(rejected_failure=1)
                     self._idle.notify_all()
                 return
             r.retries += 1
-            self.stats.retries += 1
+            self.stats.inc(retries=1)
+        self._rec.instant("requeue", "fault", "sched", r.trace_id,
+                          workload=r.workload, retry=r.retries, why=why)
+        r._t_q0 = self._rec.now()               # fresh queue_wait span
         rej = self._queue.push(r, requeue=True)
         if rej is not None:
+            self.stats.inc(rejected_full=1)
             with self._idle:
-                self.stats.rejected_full += 1
                 self._idle.notify_all()
 
     def _lane_death(self, name: str, why: str,
@@ -1208,11 +1288,13 @@ class Scheduler:
                     return  # chaos kill of an already-dead lane: no-op
             else:
                 ld.alive = False
-                self.stats.lane_deaths += 1
-                self.stats.failovers += 1
+                self.stats.inc(lane_deaths=1, failovers=1,
+                               watchdog_timeouts=1 if watchdog else 0)
                 if watchdog:
-                    self.stats.watchdog_timeouts += 1
                     self._suspect.add(name)
+                self._rec.instant(
+                    "watchdog_kill" if watchdog else "lane_death",
+                    "fault", f"lane:{name}", why=why)
                 self._idle.notify_all()
             act = self._active.get(name)
             if act is not None and not act.requeued:
@@ -1247,7 +1329,9 @@ class Scheduler:
                 return
             ld.alive = True
             self._suspect.discard(name)
-            self.stats.lane_revivals += 1
+            self.stats.inc(lane_revivals=1)
+            self._rec.instant("lane_revive", "fault", f"lane:{name}",
+                              why="injected revive")
             self._idle.notify_all()
 
     def _watchdog_loop(self) -> None:
@@ -1294,8 +1378,9 @@ class Scheduler:
             if act.requeued:
                 return
             act.requeued = True
-            self.stats.watchdog_timeouts += 1
-            self.stats.failovers += 1
+            self.stats.inc(watchdog_timeouts=1, failovers=1)
+            self._rec.instant("watchdog_kill", "fault", "lane:shared",
+                              why="shared execution timed out")
             self._idle.notify_all()
         for r in act.ex.requests:
             if not r.future.done():
@@ -1333,7 +1418,10 @@ class Scheduler:
                     if tgt is None:
                         continue        # no idle lane: hedge later
                     r.hedged = True
-                    self.stats.hedges += 1
+                    self.stats.inc(hedges=1)
+                    self._rec.instant("hedge", "fault", f"lane:{tgt}",
+                                      r.trace_id, workload=r.workload,
+                                      original_lane=lane)
                     est = max(act.ex.est_span, 0.0)
                     dec = PlacementDecision(
                         "dedicated", [tgt], now, now + est, est)
@@ -1356,9 +1444,10 @@ class Scheduler:
         return [f for f in (inj.exec_fault(n, now) for n in names)
                 if f is not None]
 
-    @staticmethod
-    def _fault_pre(faults: Sequence[object]) -> None:
+    def _fault_pre(self, faults: Sequence[object]) -> None:
         for f in faults:
+            self._rec.instant("chaos_fault", "fault", f"lane:{f.lane}",
+                              kind=f.kind)
             if f.kind == "hang":
                 time.sleep(f.duration_s)
             elif f.kind in ("kill", "flaky"):
@@ -1375,12 +1464,15 @@ class Scheduler:
                      elapsed: float, dedicated: bool,
                      count: bool = True) -> None:
         now = self.clock()
+        if count and elapsed > 0:
+            # utilization accounting: the elapsed span was busy time on
+            # every lane the execution held (shared runs hold them all)
+            for name in names:
+                self.audit.lane_busy(name, elapsed)
         with self._idle:
             if count:
-                if dedicated:
-                    self.stats.dedicated += 1
-                else:
-                    self.stats.shared += 1
+                self.stats.inc(dedicated=1 if dedicated else 0,
+                               shared=0 if dedicated else 1)
             for name in names:
                 ld = self._loads[name]
                 # replace this execution's estimated span with reality;

@@ -75,6 +75,10 @@ class SubmitMsg:
     deadline_s: Optional[float] = None
     priority: int = 0
     hedge: bool = False
+    # End-to-end trace correlation: the router mints one id per client
+    # request and re-sends it on every failover resubmit, so spans from
+    # different workers (and different req_ids) stitch into one story.
+    trace_id: Optional[str] = None
 
 
 @dataclass(frozen=True)
@@ -92,10 +96,15 @@ class ResultMsg:
 @dataclass(frozen=True)
 class HeartbeatMsg:
     """Health/load report: ``load`` is the worker's live backlog
-    (in-flight requests), ``stats`` a full ``ServeStats.snapshot()``."""
+    (in-flight requests), ``stats`` a full ``ServeStats.snapshot()``.
+    ``spans`` piggybacks the worker's drained trace events (plain
+    dicts) so the router can stitch one fleet-wide timeline; an empty
+    tuple when tracing is off or nothing happened since the last
+    beat."""
     t: float
     load: float = 0.0
     stats: Dict[str, float] = field(default_factory=dict)
+    spans: tuple = ()
 
 
 @dataclass(frozen=True)
@@ -233,9 +242,12 @@ class InProcWorker:
         if self._killed or self._sched is None:
             return False
         t0 = time.monotonic()
+        # in-proc shares the global recorder with the router, so the
+        # trace_id is all that needs forwarding (no span shipping)
         fut = self._sched.submit(msg.workload, msg.payload,
                                  deadline=msg.deadline_s,
-                                 priority=msg.priority, hedge=msg.hedge)
+                                 priority=msg.priority, hedge=msg.hedge,
+                                 trace_id=msg.trace_id)
 
         def deliver(f):
             if self._killed:
@@ -442,9 +454,11 @@ def worker_main(argv=None) -> int:
     wlock = threading.Lock()
 
     from repro.core.calibration import get_calibration_cache
+    from repro.obs import get_recorder
     from repro.serve.scheduler import Scheduler
 
     sched = Scheduler()
+    rec = get_recorder()
     stop = threading.Event()
     slow = {"factor": 1.0, "until": 0.0}
 
@@ -457,8 +471,12 @@ def worker_main(argv=None) -> int:
 
     def beat() -> None:
         st = sched.stats
+        # drained events ride the heartbeat: a SIGKILLed worker loses at
+        # most one beat interval of spans, a clean shutdown loses none
+        # (the final beat below ships the tail)
         send(HeartbeatMsg(time.monotonic(), load=float(st.in_flight),
-                          stats=st.snapshot()))
+                          stats=st.snapshot(),
+                          spans=tuple(rec.drain())))
         # keep the shared merge-on-write store fresh for peers and for
         # cold workers joining the fleet (zero-probe contract)
         get_calibration_cache().flush()
@@ -476,7 +494,8 @@ def worker_main(argv=None) -> int:
         t0 = time.monotonic()
         fut = sched.submit(msg.workload, msg.payload,
                            deadline=msg.deadline_s,
-                           priority=msg.priority, hedge=msg.hedge)
+                           priority=msg.priority, hedge=msg.hedge,
+                           trace_id=msg.trace_id)
 
         def deliver(f):
             now = time.monotonic()
@@ -511,6 +530,7 @@ def worker_main(argv=None) -> int:
     get_calibration_cache().flush()
     stop.set()
     hb.join(5.0)
+    beat()                             # final flush: ship leftover spans
     return 0
 
 

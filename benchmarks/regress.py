@@ -84,7 +84,8 @@ def check(rows, threshold: float, min_delta_us: float = 100.0,
                             "serving/lm_ratio", "serving/chaos_ratio",
                             "serving/fleet_ratio",
                             "serving/fleet_cold_probe",
-                            "serving/obs_")):
+                            "serving/obs_",
+                            "serving/scenario_info_")):
             continue                      # higher-is-better / count /
             #                               diagnostic audit rows
         if name.startswith("serving/") and ("_fifo_" in name

@@ -78,7 +78,7 @@ for p in (_ROOT, os.path.join(_ROOT, "src")):
 # latency percentiles of different traffic.
 MIX_VERSION = "m2"
 # Separate trajectory for the all-13-Table-1-workloads mix.
-FULL13_VERSION = "f1"
+FULL13_VERSION = "f2"
 # Chaos availability scenario (mid-trace lane death + revive).
 CHAOS_VERSION = "c1"
 # Fleet scenario (router over K worker processes, kill-one-of-K).
@@ -1185,12 +1185,15 @@ def run(smoke: bool = False, json_out: bool = False,
     missing13 = [w for w in ALL_WORKLOADS if w not in adapters.available()]
     mix13 = _mix13(smoke)
     t13, _ = _warm_and_measure(mix13, measure_capacity=False)
-    # 0.8x one lane's mean-service rate: the heavy members (montecarlo,
-    # bundle: ~40 ms vs the ~1 ms median) still force co-scheduling —
-    # one lane alone head-of-line-blocks — without driving the short
-    # trace into open-loop saturation where percentiles measure only
-    # backlog depth
-    rate13 = 0.8 / max(t13, 1e-6)
+    # 1.2x one lane's mean-service rate (f2; was 0.8x): per-workload-
+    # class contention factors price host-native members (sort) at
+    # their measured near-perfect overlap instead of the jax-jax
+    # factor, so the co-schedules that absorb the extra 0.4x are now
+    # let through — past one lane's capacity, only real cross-lane
+    # overlap (not backlog) keeps the trace served.  The heavy members
+    # (montecarlo, bundle: ~40 ms vs the ~1 ms median) still force
+    # co-scheduling — one lane alone head-of-line-blocks.
+    rate13 = 1.2 / max(t13, 1e-6)
     n13 = (3 if smoke else 4) * len(mix13)
     # split_overhead 1.0: the full-13 row measures PLACEMENT over the
     # whole Table-1 set (co-scheduling + batching across 13 workloads
@@ -1246,6 +1249,27 @@ def run(smoke: bool = False, json_out: bool = False,
     rows += lm_rows
     results["lm"] = lm_results
     dropped_total += lm_results["dropped_without_rejection"]
+
+    # --- scenario portfolio: replayable traffic regimes (PR 10) ---
+    # the scheduler judged across regimes, not one Poisson point:
+    # diurnal ramp / flash crowd / heavy tail / mix drift / chaos
+    # mid-trace / closed-loop, each a regress-gated row family
+    scn_failures = []
+    from benchmarks.scenarios import run_scenarios as scenario_driver
+    scn_ok, scn_results = scenario_driver.run(smoke=smoke,
+                                              print_rows=False)
+    for r in scn_results:
+        rows += r["rows"]
+        dropped_total += r["dropped_without_rejection"]
+        if not r["ok"]:
+            scn_failures.append(
+                f"scenario {r['scenario']}: "
+                f"dropped={r['dropped_without_rejection']} "
+                f"lane_deaths="
+                f"{r['counters'].get('lane_deaths', 0):.0f}")
+    results["scenarios"] = [
+        {k: v for k, v in r.items() if k != "rows"}
+        for r in scn_results]
     results["dropped_without_rejection"] = dropped_total
 
     probes_b = None
@@ -1287,7 +1311,8 @@ def run(smoke: bool = False, json_out: bool = False,
               f"{full['probe_runs']} probe run(s); cost-term priors "
               f"must cover every Table-1 workload")
         ok = False
-    for msg in obs_failures + chaos_failures + fleet_failures + lm_failures:
+    for msg in (obs_failures + chaos_failures + fleet_failures
+                + lm_failures + scn_failures):
         print(f"serving_bench: FAIL — {msg}")
         ok = False
     # the latency win needs real parallel lanes: on a single device

@@ -122,6 +122,8 @@ class ServeStats:
     engine_cancellations: int = 0    # rows dropped at a step boundary
     #                                  because their future already
     #                                  resolved (hedge loser / shutdown)
+    engine_preemptions: int = 0      # step loops that yielded the lane
+    #                                  to latency-class deadline work
     retries: int = 0                 # requests requeued after lane fault
     hedges: int = 0                  # duplicate executions launched
     hedge_wins: int = 0              # hedge resolved before the original
@@ -172,6 +174,7 @@ class ServeStats:
             "engine_joins": self.engine_joins,
             "engine_evictions": self.engine_evictions,
             "engine_cancellations": self.engine_cancellations,
+            "engine_preemptions": self.engine_preemptions,
             "retries": self.retries,
             "hedges": self.hedges,
             "hedge_wins": self.hedge_wins,
@@ -187,9 +190,11 @@ class ServeStats:
         }
 
     def row(self) -> str:
+        rejected = (self.rejected_full + self.rejected_shutdown
+                    + self.rejected_failure)
         return (f"serve: submitted={self.submitted} "
                 f"completed={self.completed} failed={self.failed} "
-                f"rejected={self.rejected_full + self.rejected_shutdown + self.rejected_failure} "
+                f"rejected={rejected} "
                 f"shed={self.shed_deadline + self.shed_brownout} "
                 f"retries={self.retries} batches={self.batches} "
                 f"dedicated={self.dedicated} shared={self.shared} "

@@ -153,6 +153,28 @@ class ChaosInjector:
         self._emitted_proc: Set[int] = set()
         self._lock = threading.Lock()
 
+    @classmethod
+    def from_spec(cls, faults: Sequence[dict],
+                  clock: Callable[[], float] = time.monotonic,
+                  seed: int = 0) -> "ChaosInjector":
+        """Build from a JSON-friendly fault list (the scenario engine's
+        on-disk form).  Each dict needs ``t`` + ``kind`` and either
+        ``lane`` (LaneFault) or ``worker`` (ProcFault); the remaining
+        keys (``duration_s``, ``factor``, ``p``) pass through.  Unknown
+        kinds fail loudly via the dataclass validators — a scenario
+        with a typo'd fault must not silently run fault-free."""
+        built: List[object] = []
+        for f in faults:
+            f = dict(f)
+            if "worker" in f:
+                built.append(ProcFault(**f))
+            elif "lane" in f:
+                built.append(LaneFault(**f))
+            else:
+                raise ValueError(
+                    f"fault spec needs 'lane' or 'worker': {f!r}")
+        return cls(built, clock=clock, seed=seed)
+
     def arm(self, t0: Optional[float] = None) -> None:
         """Start the fault clock (idempotent)."""
         with self._lock:

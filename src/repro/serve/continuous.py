@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import collections
 import threading
+import time
 import weakref
 from typing import Callable, Dict, List, Optional
 
@@ -108,8 +109,16 @@ class ContinuousEngine:
     ``resolve(req, value, t_start)`` is the Scheduler's ``_resolve``
     (keeps the accounting invariant: every submitted request is
     completed/failed exactly once); ``hooks`` may carry ``on_step``,
-    ``on_join``, ``on_evict``, ``on_cancel`` counters (called outside
-    locks).
+    ``on_join``, ``on_evict``, ``on_cancel``, ``on_preempt`` counters
+    (called outside locks).
+
+    ``should_yield()`` (optional) is polled at every step boundary:
+    while it returns True — the Scheduler dispatched latency-class
+    deadline work at this engine's lane — the step loop pauses
+    (bounded) instead of re-grabbing the lane lock, so the urgent work
+    wins the lock handoff.  A batch whose own live rows include a
+    latency-class request never yields: pausing it would starve
+    exactly the class being prioritized.
 
     A row whose request future is already resolved — a hedge duplicate
     won the race, or the scheduler rejected it at shutdown — is dropped
@@ -126,6 +135,8 @@ class ContinuousEngine:
                  prefill_group: str = "", decode_group: str = "",
                  prefill_ctx: Optional[Callable] = None,
                  step_ctx: Optional[Callable] = None,
+                 should_yield: Optional[Callable[[], bool]] = None,
+                 yield_max_s: float = 0.1,
                  hooks: Optional[Dict[str, Callable]] = None,
                  clock: Optional[Callable[[], float]] = None):
         import time as _time
@@ -141,6 +152,8 @@ class ContinuousEngine:
         self._reject = reject
         self._prefill_ctx = prefill_ctx or (lambda: nullcontext())
         self._step_ctx = step_ctx or (lambda: nullcontext())
+        self._should_yield = should_yield
+        self._yield_max_s = max(float(yield_max_s), 0.0)
         self._hooks = dict(hooks or {})
         self._clock = clock or _time.monotonic
         self._rec = get_recorder()
@@ -155,6 +168,7 @@ class ContinuousEngine:
         self.joins = 0
         self.evictions = 0
         self.cancellations = 0
+        self.preemptions = 0
         self.max_live = 0
         with self._step_ctx():
             self._state = stepper.init_slots()
@@ -255,6 +269,7 @@ class ContinuousEngine:
             if not live_now:
                 continue
 
+            self._maybe_yield(live_now)
             t_s0 = self._rec.now()
             for lk in self.step_locks:
                 lk.acquire()
@@ -329,6 +344,34 @@ class ContinuousEngine:
             for row in evicted:
                 self._finish_row(row)
 
+    def _maybe_yield(self, live_now: Dict[int, _Row]) -> None:
+        """Iteration-boundary preemption: pause (bounded) while the
+        Scheduler has latency-class deadline work waiting for this
+        engine's lane — the waiting lane worker wins the lock handoff
+        instead of racing the step loop for it.  Skipped when a live
+        row is itself latency-class."""
+        check = self._should_yield
+        if check is None or not check():
+            return
+        if any(getattr(row.pending.req, "slo_class", "") == "latency"
+               for row in live_now.values()):
+            return
+        self.preemptions += 1
+        if self._rec.enabled:
+            self._rec.instant("engine_preempt", "engine", self._track,
+                              n_live=len(live_now))
+        if "on_preempt" in self._hooks:
+            self._hooks["on_preempt"](1)
+        deadline = time.monotonic() + self._yield_max_s
+        while check() and time.monotonic() < deadline:
+            with self._cv:
+                if self._stop:
+                    return
+            # urgent work clears once its lane worker HOLDS the locks
+            # (scheduler._lane_run) — a short sleep is the handoff; the
+            # deadline bounds livelock if the urgent lane died instead
+            time.sleep(0.001)
+
     def _finish_row(self, row: _Row) -> None:
         pending = row.pending
         try:
@@ -376,6 +419,7 @@ class ContinuousEngine:
             return {"workload": self.workload, "steps": self.steps,
                     "joins": self.joins, "evictions": self.evictions,
                     "cancellations": self.cancellations,
+                    "preemptions": self.preemptions,
                     "max_live": self.max_live, "live": len(self._live),
                     "prefill_group": self.prefill_group,
                     "decode_group": self.decode_group}

@@ -22,6 +22,36 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
+# SLO classes (scenario engine / class-aware admission).  ``latency``
+# requests are deadline-sensitive: projected-miss work sheds at
+# admission and their arrival can preempt batch work at the continuous
+# engine's iteration boundaries.  ``batch`` requests queue through
+# pressure (a late batch result is still a result).  ``best_effort``
+# is shed first under brownout.
+SLO_LATENCY = "latency"
+SLO_BATCH = "batch"
+SLO_BEST_EFFORT = "best_effort"
+SLO_CLASSES = (SLO_LATENCY, SLO_BATCH, SLO_BEST_EFFORT)
+
+
+def resolve_slo_class(slo_class: Optional[str], priority: int,
+                      deadline_s: Optional[float],
+                      hedge: bool) -> str:
+    """Explicit class wins; otherwise derive the pre-SLO semantics so
+    existing callers keep their behavior: ``priority < 0`` was always
+    best-effort (brownout shed), a deadline or a hedge marks the
+    request latency-sensitive, everything else is batch work."""
+    if slo_class is not None:
+        if slo_class not in SLO_CLASSES:
+            raise ValueError(f"unknown SLO class {slo_class!r}; "
+                             f"expected one of {SLO_CLASSES}")
+        return slo_class
+    if priority < 0:
+        return SLO_BEST_EFFORT
+    if deadline_s is not None or hedge:
+        return SLO_LATENCY
+    return SLO_BATCH
+
 
 @dataclass(frozen=True)
 class Rejection:
@@ -139,6 +169,9 @@ class Request:
     # requeues, hedges and router resubmits across fresh req_ids, so
     # one exported trace stitches a request's whole path
     trace_id: Optional[str] = field(compare=False, default=None)
+    # SLO class: admission, brownout ordering and engine preemption
+    # key off it (see resolve_slo_class for the derivation defaults)
+    slo_class: str = field(compare=False, default=SLO_BATCH)
 
     def __post_init__(self):
         self.sort_key = (-self.priority, self.req_id)

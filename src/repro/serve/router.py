@@ -148,6 +148,7 @@ class _Pending:
     key: str
     priority: int
     hedge: bool
+    slo: Optional[str]
     t_submit: float
     t_deadline: Optional[float]
     worker: str = ""
@@ -339,11 +340,14 @@ class Router:
     def submit(self, workload: str, payload=None,
                deadline: Optional[float] = None, priority: int = 0,
                hedge: bool = False,
-               bucket: Optional[str] = None) -> ServeFuture:
+               bucket: Optional[str] = None,
+               slo_class: Optional[str] = None) -> ServeFuture:
         """Route one request to its affinity worker.  Same client
         contract as ``Scheduler.submit``: never blocks, every future
         resolves exactly once — with a value, an application error, or
-        a structured ``RequestRejected``."""
+        a structured ``RequestRejected``.  ``slo_class`` rides the wire
+        to the worker's scheduler (class-aware admission); None keeps
+        the derived default."""
         self.start()
         fut = ServeFuture()
         now = self.clock()
@@ -351,7 +355,7 @@ class Router:
         rec = self._rec
         trace_id = new_trace_id() if rec.enabled else None
         p = _Pending(fut, workload, payload, key, priority, hedge,
-                     t_submit=now,
+                     slo_class, t_submit=now,
                      t_deadline=None if deadline is None
                      else now + max(deadline, 0.0),
                      trace_id=trace_id)
@@ -442,7 +446,7 @@ class Router:
         ok = self._slots[name].handle.submit(SubmitMsg(
             req_id=rid, workload=p.workload, payload=p.payload,
             deadline_s=deadline_remaining, priority=p.priority,
-            hedge=p.hedge, trace_id=p.trace_id))
+            hedge=p.hedge, trace_id=p.trace_id, slo=p.slo))
         if not ok:
             # the transport is already broken: declare the worker dead
             # now (the monitor would within a tick) — that re-hashes

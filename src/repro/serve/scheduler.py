@@ -79,7 +79,10 @@ once) → ``shutdown()`` (drain + join all threads).  Env knobs:
 ``REPRO_SERVE_QUEUE`` (depth, default 256), ``REPRO_SERVE_WINDOW_MS``
 (batch window, default 2), ``REPRO_SERVE_MAX_BATCH`` (default 8),
 ``REPRO_SERVE_SPAN_FACTOR`` (pins the otherwise self-probed
-cross-lane contention factor), ``REPRO_SERVE_STALE_TAU`` (staleness
+jax-vs-jax cross-lane contention factor),
+``REPRO_SERVE_SPAN_FACTOR_HOST`` (pins the host-native-vs-jax
+factor — the per-workload-class pricing), ``REPRO_SERVE_STALE_TAU``
+(staleness
 decay time constant for placement estimates, seconds; 0 disables),
 ``REPRO_SERVE_CONTINUOUS`` (step-quantum engine on/off, default on),
 ``REPRO_SERVE_EXEC_TIMEOUT_S`` (watchdog floor, default 30),
@@ -106,8 +109,9 @@ from repro.serve import continuous
 from repro.serve.placement import (SHARED, GroupLoad, PlacementDecision,
                                    deadline_feasible, degraded_fraction,
                                    plan_disaggregation, plan_placement)
-from repro.serve.request_queue import (Rejection, Request, RequestQueue,
-                                       ServeFuture)
+from repro.serve.request_queue import (SLO_BEST_EFFORT, SLO_LATENCY,
+                                       Rejection, Request, RequestQueue,
+                                       ServeFuture, resolve_slo_class)
 
 _SHARED_LANE = "__shared__"
 
@@ -140,31 +144,60 @@ def _env_float(name: str, default: float) -> float:
         return default
 
 
-# measured span factors, memoized per device signature: every
-# scheduler in a process (and every test) shares one ~100 ms probe
+# measured span factors, memoized per (device signature, lane class):
+# every scheduler in a process (and every test) shares one ~100 ms
+# probe per class
 _SPAN_FACTOR_CACHE: Dict[tuple, float] = {}
 _SPAN_FACTOR_LOCK = threading.Lock()
 
 
+def _probe_pair(lane_a, lane_b, calibrate) -> float:
+    """Time two lane callables solo then concurrently; returns the
+    contention factor ``min(max(1, 2/capacity), 2)`` where
+    ``capacity = (t_a + t_b) / t_both`` (2.0 = perfect overlap,
+    ~1.0 = fully contended).  Summing per-lane solo times keeps
+    device-speed asymmetry out of the number — under perfect overlap
+    ``t_both ~= t_slow`` and the sum-based capacity still reads ~2,
+    where a ``2*t_fast/t_both`` formula would misread asymmetry as
+    contention.  ``calibrate`` returns per-lane iteration counts so
+    each side runs ~30 ms."""
+    iters = calibrate()
+    t_solo = 0.0
+    for fn, n in zip((lane_a, lane_b), iters):
+        t0 = time.perf_counter()
+        fn(n)
+        t_solo += time.perf_counter() - t0
+    threads = [threading.Thread(target=fn, args=(n,),
+                                name="serve-span-probe")
+               for fn, n in zip((lane_a, lane_b), iters)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    t_both = max(time.perf_counter() - t0, 1e-9)
+    capacity = max(t_solo / t_both, 1e-3)
+    # clamp to the model's meaningful range: 1.0 = perfect overlap,
+    # 2.0 = a split's halves fully serialize.  Beyond 2 the probe is
+    # measuring its own sync/thread overhead, and a runaway factor
+    # would poison every dedicated projection too.
+    return min(max(1.0, 2.0 / capacity), 2.0)
+
+
 def measure_shared_span_factor(groups: Sequence[DeviceGroup]) -> float:
-    """Self-probed cross-lane contention pricing: ``2 / capacity``.
+    """Self-probed cross-lane contention pricing for jax-vs-jax lane
+    pairs: ``2 / capacity``.
 
     The shared-split candidate models perfect overlap; reality is the
     host's measured pairwise headroom.  Two lanes pinned to the first
-    two groups' primary devices each run a small jitted op; each lane
-    is timed SOLO, then both concurrently: ``capacity = (t_a + t_b) /
-    t_both`` (2.0 = perfect overlap, ~1.0 = fully contended).  Summing
-    per-lane solo times keeps device-speed asymmetry out of the
-    number — on a heterogeneous box where one lane is simply slower,
-    ``t_both ~= t_slow`` under perfect overlap and the sum-based
-    capacity still reads ~2, where a ``2*t_fast/t_both`` formula would
-    misread the asymmetry as contention and suppress every split.
-    The factor ``max(1, 2/capacity)`` multiplies the shared
-    candidate's modeled makespan — exactly what ``overlap_check`` /
-    ``serving_bench`` measured externally before; now the Scheduler
-    pays the probe itself, once per process per device signature, so
-    callers cannot hand it a stale or wrong-host number.
-    ``REPRO_SERVE_SPAN_FACTOR`` pins the result (probe skipped)."""
+    two groups' primary devices each run a small jitted op, timed solo
+    then concurrently (see ``_probe_pair``).  The factor multiplies
+    the shared candidate's modeled makespan — exactly what
+    ``overlap_check`` / ``serving_bench`` measured externally before;
+    now the Scheduler pays the probe itself, once per process per
+    device signature, so callers cannot hand it a stale or wrong-host
+    number.  ``REPRO_SERVE_SPAN_FACTOR`` pins the result (probe
+    skipped)."""
     pinned = _env_float("REPRO_SERVE_SPAN_FACTOR", 0.0)
     if pinned > 0:
         return pinned
@@ -172,7 +205,7 @@ def measure_shared_span_factor(groups: Sequence[DeviceGroup]) -> float:
         return 1.0
     primaries = tuple(g.devices[0] if g.devices else None
                       for g in list(groups)[:2])
-    key = tuple(str(d) for d in primaries)
+    key = tuple(str(d) for d in primaries) + ("jax",)
     with _SPAN_FACTOR_LOCK:
         if key in _SPAN_FACTOR_CACHE:
             return _SPAN_FACTOR_CACHE[key]
@@ -187,41 +220,98 @@ def measure_shared_span_factor(groups: Sequence[DeviceGroup]) -> float:
         xs = [x if d is None else jax.device_put(x, d) for d in primaries]
         f = jax.jit(lambda v: (v @ v) * 0.5 + 0.1)
 
-        def lane(dev, arr, iters):
-            ctx = (jax.default_device(dev) if dev is not None
-                   else nullcontext())
-            with ctx:
-                for _ in range(iters):
-                    f(arr).block_until_ready()
+        def lane(dev, arr):
+            def run(iters):
+                # ctx built per call: default_device is single-use
+                ctx = (jax.default_device(dev) if dev is not None
+                       else nullcontext())
+                with ctx:
+                    for _ in range(iters):
+                        f(arr).block_until_ready()
+            return run
 
-        for d, a in zip(primaries, xs):                # compile per device
-            lane(d, a, 1)
-        t0 = time.perf_counter()
-        lane(primaries[0], xs[0], 1)
-        t_call = max(time.perf_counter() - t0, 1e-6)
-        iters = max(int(0.03 / t_call), 3)             # ~30 ms per lane
-        t_solo = 0.0
-        for d, a in zip(primaries, xs):                # each lane alone
+        lanes = [lane(d, a) for d, a in zip(primaries, xs)]
+
+        def calibrate():
+            for ln in lanes:                       # compile per device
+                ln(1)
             t0 = time.perf_counter()
-            lane(d, a, iters)
-            t_solo += time.perf_counter() - t0
-        threads = [threading.Thread(target=lane, args=(d, a, iters),
-                                    name="serve-span-probe")
-                   for d, a in zip(primaries, xs)]
-        t0 = time.perf_counter()
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        t_both = max(time.perf_counter() - t0, 1e-9)
-        capacity = max(t_solo / t_both, 1e-3)
-        # clamp to the model's meaningful range: 1.0 = perfect
-        # overlap, 2.0 = a split's halves fully serialize.  Beyond 2
-        # the probe is measuring its own sync/thread overhead, and a
-        # runaway factor would poison every dedicated projection too.
-        factor = min(max(1.0, 2.0 / capacity), 2.0)
+            lanes[0](1)
+            t_call = max(time.perf_counter() - t0, 1e-6)
+            n = max(int(0.03 / t_call), 3)         # ~30 ms per lane
+            return (n, n)
+
+        factor = _probe_pair(lanes[0], lanes[1], calibrate)
         _SPAN_FACTOR_CACHE[key] = factor
         return factor
+
+
+def measure_host_span_factor(groups: Sequence[DeviceGroup]) -> float:
+    """Contention pricing for host-native-vs-jax lane pairs.
+
+    Host-native adapters (GIL-releasing single-core numpy, e.g. sort)
+    overlap an internally-multithreaded XLA lane near-perfectly, so
+    pricing their shared/co-scheduled spans with the jax-jax factor
+    (~2 on a no-headroom box) systematically suppresses exactly the
+    co-schedules the paper's affinity spread rewards.  One lane runs
+    ``np.sort`` (the host class's archetype), the other the jitted
+    matmul; same solo-vs-concurrent capacity formula as the jax probe.
+    ``REPRO_SERVE_SPAN_FACTOR_HOST`` pins the result (probe
+    skipped)."""
+    pinned = _env_float("REPRO_SERVE_SPAN_FACTOR_HOST", 0.0)
+    if pinned > 0:
+        return pinned
+    if len(groups) < 2:
+        return 1.0
+    primaries = tuple(g.devices[0] if g.devices else None
+                      for g in list(groups)[:2])
+    key = tuple(str(d) for d in primaries) + ("host",)
+    with _SPAN_FACTOR_LOCK:
+        if key in _SPAN_FACTOR_CACHE:
+            return _SPAN_FACTOR_CACHE[key]
+
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        x = jnp.ones((512, 512), jnp.float32)
+        xj = x if primaries[0] is None else jax.device_put(x, primaries[0])
+        f = jax.jit(lambda v: (v @ v) * 0.5 + 0.1)
+        h = np.random.default_rng(0).random(1 << 16).astype(np.float32)
+
+        def jax_lane(iters):
+            # ctx built per call: default_device is single-use
+            ctx = (jax.default_device(primaries[0])
+                   if primaries[0] is not None else nullcontext())
+            with ctx:
+                for _ in range(iters):
+                    f(xj).block_until_ready()
+
+        def host_lane(iters):
+            for _ in range(iters):
+                np.sort(h, kind="stable")
+
+        def calibrate():
+            out = []
+            for ln in (jax_lane, host_lane):
+                ln(1)                              # compile / warm
+                t0 = time.perf_counter()
+                ln(1)
+                t_call = max(time.perf_counter() - t0, 1e-6)
+                out.append(max(int(0.03 / t_call), 3))
+            return tuple(out)
+
+        factor = _probe_pair(jax_lane, host_lane, calibrate)
+        _SPAN_FACTOR_CACHE[key] = factor
+        return factor
+
+
+def measure_span_factors(groups: Sequence[DeviceGroup]
+                         ) -> Dict[str, float]:
+    """Per-workload-class contention factors: one probe per lane-class
+    pair (``RequestSpec.lane_class``) instead of one global number."""
+    return {"jax": measure_shared_span_factor(groups),
+            "host": measure_host_span_factor(groups)}
 
 
 @dataclass
@@ -233,6 +323,9 @@ class _Execution:
     t_dispatch: float = 0.0
     est_span: float = 0.0
     hedge: bool = False              # duplicate launched by the watchdog
+    # lanes whose _urgent count this execution holds (latency-class
+    # deadline work: engines on these lanes yield until it runs)
+    urgent_lanes: tuple = ()
 
     @property
     def n_units(self) -> int:
@@ -304,10 +397,21 @@ class Scheduler:
         # overlap_check-style or silently inherit 1.0.
         if shared_span_factor is None:
             if policy == "cost" and len(self.groups) >= 2:
-                shared_span_factor = measure_shared_span_factor(
-                    self.groups)
+                # per-workload-class probes: host-native lanes (numpy
+                # sort) overlap an XLA lane near-perfectly even where
+                # two jax lanes fully contend — one global factor
+                # priced those co-schedules out of existence
+                self.span_factors = {
+                    k: max(float(v), 1e-9)
+                    for k, v in measure_span_factors(self.groups).items()}
             else:
-                shared_span_factor = 1.0       # fifo never shares
+                self.span_factors = {"jax": 1.0, "host": 1.0}
+            shared_span_factor = self.span_factors["jax"]
+        else:
+            # scalar caller override prices every class (back-compat)
+            self.span_factors = {
+                "jax": max(float(shared_span_factor), 1e-9),
+                "host": max(float(shared_span_factor), 1e-9)}
         self.shared_span_factor = max(float(shared_span_factor), 1e-9)
         # staleness decay for placement estimates (age-weighted
         # shrinkage toward the cross-group mean, calibration.
@@ -361,6 +465,10 @@ class Scheduler:
                                     clock=clock)
         self._active: Dict[str, _Active] = {}  # lane -> running execution
         self._suspect: set = set()             # lanes downed by watchdog
+        # lanes with a dispatched-but-not-yet-running latency-class
+        # deadline execution: continuous engines sharing the lane yield
+        # at their next step boundary instead of re-grabbing the lock
+        self._urgent: Dict[str, int] = {g.name: 0 for g in self.groups}
         self._wd_stop = threading.Event()
         # anti-starvation exploration: a lane whose cached estimate
         # says "slow" never gets traffic, so the estimate never heals —
@@ -480,7 +588,8 @@ class Scheduler:
     def submit(self, workload: str, payload=None,
                deadline: Optional[float] = None,
                priority: int = 0, hedge: bool = False,
-               trace_id: Optional[str] = None) -> ServeFuture:
+               trace_id: Optional[str] = None,
+               slo_class: Optional[str] = None) -> ServeFuture:
         """Enqueue one request.  ``deadline`` is seconds from now; a
         request that cannot (or did not) finish in time resolves with a
         structured ``RequestRejected`` instead of hanging.  Never
@@ -488,12 +597,18 @@ class Scheduler:
 
         ``hedge=True`` marks the request latency-sensitive: once its
         execution runs past the hedge delay the watchdog duplicates it
-        on an idle lane and the first result wins.  ``priority < 0``
-        marks it best-effort: shed first under brownout (a lane is
-        down and the survivors are absorbing its load).  ``trace_id``
-        threads an upstream trace through (the fleet router's — a
-        fresh one is minted when absent and tracing is on)."""
+        on an idle lane and the first result wins.  ``slo_class``
+        ("latency" | "batch" | "best_effort", default derived — see
+        ``resolve_slo_class``) drives class-aware admission: latency
+        work sheds on a projected deadline miss and can preempt engine
+        batches, batch work queues through pressure and sheds only
+        under brownout WITH a deep queue, best-effort sheds at any
+        brownout (a lane is down and the survivors are absorbing its
+        load).  ``trace_id`` threads an upstream trace through (the
+        fleet router's — a fresh one is minted when absent and tracing
+        is on)."""
         self.start()
+        slo = resolve_slo_class(slo_class, priority, deadline, hedge)
         rec = self._rec
         if trace_id is None and rec.enabled:
             trace_id = new_trace_id()
@@ -503,7 +618,7 @@ class Scheduler:
                       t_submit=now,
                       t_deadline=None if deadline is None
                       else now + max(deadline, 0.0),
-                      hedge=hedge, trace_id=trace_id)
+                      hedge=hedge, trace_id=trace_id, slo_class=slo)
         with self._lock:
             self.stats.inc(submitted=1)
             if self._draining or self._stopped:
@@ -511,15 +626,23 @@ class Scheduler:
                 req.reject(Rejection("shutdown", workload,
                                      detail="scheduler is draining"))
                 return req.future
-            if priority < 0 and self._brownout_locked():
-                self.stats.inc(shed_brownout=1)
-                rec.instant("brownout", "fault", "sched", trace_id,
-                            workload=workload)
-                req.reject(Rejection(
-                    "brownout", workload,
-                    detail="best-effort shed: a lane is down and "
-                           "survivors are absorbing its load"))
-                return req.future
+            if slo != SLO_LATENCY and self._brownout_locked():
+                # brownout ordering by class: best-effort sheds at any
+                # degradation; batch sheds only once the queue is past
+                # half depth (a late batch result is still a result —
+                # shed it only when backlog says capacity really is
+                # gone); latency work always admits (its deadline
+                # feasibility check governs instead)
+                if (slo == SLO_BEST_EFFORT
+                        or len(self._queue) > self._queue.max_depth // 2):
+                    self.stats.inc(shed_brownout=1)
+                    rec.instant("brownout", "fault", "sched", trace_id,
+                                workload=workload, slo=slo)
+                    req.reject(Rejection(
+                        "brownout", workload,
+                        detail=f"{slo} shed: a lane is down and "
+                               "survivors are absorbing its load"))
+                    return req.future
         try:
             spec = self._make_spec(workload, payload)
         except Exception as e:
@@ -651,6 +774,13 @@ class Scheduler:
                      for ld in self._loads.values()]
         if self.policy == "fifo":
             loads = [ld for ld in loads if ld.name == self.fifo_group]
+        # contention pricing resolved per workload class: host-native
+        # adapters (lane_class "host", e.g. numpy sort) measured a
+        # near-1.0 factor where jax-jax pairs measure ~2 on a
+        # no-headroom box — the class factor is what lets exactly
+        # those co-schedules through
+        factor = self.span_factors.get(
+            getattr(specs[0], "lane_class", "jax"), self.shared_span_factor)
         decision = plan_placement(
             n_units, loads, now,
             split_overhead_s=self.split_overhead_s,
@@ -658,11 +788,11 @@ class Scheduler:
             # them is exactly co-scheduling, allowed; single tiny
             # requests may still prefer a dedicated lane on their own
             allow_shared=(self.policy == "cost" and len(loads) >= 2),
-            shared_span_factor=self.shared_span_factor,
+            shared_span_factor=factor,
             # the same measured headroom prices dedicated spans that
             # overlap other busy lanes (no-headroom hosts: two
             # "parallel" dedicated lanes are contention, not overlap)
-            contention_factor=self.shared_span_factor)
+            contention_factor=factor)
         if decision is None:
             # every lane is dead: a structured *rejection*, counted as
             # one (a Rejection delivered to the caller while `failed`
@@ -687,11 +817,15 @@ class Scheduler:
                 alternatives={k: round(v, 6) for k, v
                               in decision.alternatives.items()})
 
-        # deadline-based shedding at admission: members whose deadline
-        # the projected completion already misses are rejected now
+        # deadline-based shedding at admission: LATENCY-class members
+        # whose deadline the projected completion already misses are
+        # rejected now.  Batch/best-effort work with a deadline queues
+        # anyway (a late batch result is still a result; the pop-time
+        # expired-deadline shed still applies once it truly passes).
         kept: List[Request] = []
         for r in batch:
-            if deadline_feasible(decision, now, r.t_deadline):
+            if (r.slo_class != SLO_LATENCY
+                    or deadline_feasible(decision, now, r.t_deadline)):
                 kept.append(r)
                 continue
             if r.reject(Rejection(
@@ -716,9 +850,17 @@ class Scheduler:
         ex = _Execution([r for r in kept], [r.payload for r in kept],
                         decision, t_dispatch=now,
                         est_span=decision.est_exec_s)
+        if any(r.slo_class == SLO_LATENCY and r.t_deadline is not None
+               for r in kept):
+            # latency-class deadline work headed for these lanes:
+            # engines stepping batch rows there yield at their next
+            # iteration boundary instead of re-taking the lane lock
+            ex.urgent_lanes = tuple(decision.groups)
         with self._lock:
             if len(kept) > 1:
                 self.stats.inc(batches=1, batched_requests=len(kept))
+            for name in ex.urgent_lanes:
+                self._urgent[name] = self._urgent.get(name, 0) + 1
             for name in decision.groups:
                 ld = self._loads[name]
                 ld.busy_until = max(ld.busy_until, now) + ex.est_span
@@ -822,6 +964,22 @@ class Scheduler:
             def on_cancel(k):
                 self.stats.inc(engine_cancellations=k)
 
+            def on_preempt(k):
+                self.stats.inc(engine_preemptions=k)
+
+            # lanes whose urgent (latency-class deadline) dispatches
+            # pause this engine's batch stepping: everything its step
+            # locks cover (all groups on a simulated platform — the
+            # same set _lane_locks serializes)
+            yield_lanes = (sorted(self._group_locks)
+                           if getattr(self._ex, "simulated", False)
+                           else [plan.decode_group])
+
+            def should_yield():
+                with self._lock:
+                    return any(self._urgent.get(n, 0) > 0
+                               for n in yield_lanes)
+
             eng = continuous.ContinuousEngine(
                 stepper,
                 resolve=self._resolve,
@@ -832,8 +990,10 @@ class Scheduler:
                 decode_group=plan.decode_group,
                 prefill_ctx=lambda: self._device_ctx(pre_g),
                 step_ctx=lambda: self._device_ctx(dec_g),
+                should_yield=should_yield,
                 hooks={"on_step": on_step, "on_join": on_join,
-                       "on_evict": on_evict, "on_cancel": on_cancel},
+                       "on_evict": on_evict, "on_cancel": on_cancel,
+                       "on_preempt": on_preempt},
                 clock=self.clock)
             self._engines[key] = eng
             self.engine_placements[stepper.workload] = plan
@@ -959,6 +1119,9 @@ class Scheduler:
         deadline = t0 + max(self.exec_timeout_k * max(ex.est_span, 0.0),
                             self.exec_timeout_s)
         act = _Active(ex, t0, deadline)
+        # the lane locks are held here: the urgent work has its lane,
+        # engines may resume stepping at the next lock handoff
+        self._mark_urgent_done(ex)
         with self._lock:
             self._active[lane_name] = act
         try:
@@ -966,6 +1129,16 @@ class Scheduler:
         finally:
             with self._lock:
                 self._active.pop(lane_name, None)
+
+    def _mark_urgent_done(self, ex: _Execution) -> None:
+        """Release the lanes' urgent counts this execution holds
+        (idempotent: requeue paths and normal execution both call)."""
+        lanes, ex.urgent_lanes = ex.urgent_lanes, ()
+        if not lanes:
+            return
+        with self._lock:
+            for name in lanes:
+                self._urgent[name] = max(self._urgent.get(name, 0) - 1, 0)
 
     def _maybe_rejoin(self, name: str) -> None:
         """A watchdog-suspected lane whose stuck execution finally
@@ -1313,6 +1486,7 @@ class Scheduler:
                     lane_q.put(None)
                     break
                 to_requeue.extend(ex.requests)
+                self._mark_urgent_done(ex)   # it will redispatch fresh
                 with self._lock:
                     ld = self._loads[name]
                     ld.busy_until = max(ld.busy_until - ex.est_span,

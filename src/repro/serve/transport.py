@@ -75,6 +75,9 @@ class SubmitMsg:
     deadline_s: Optional[float] = None
     priority: int = 0
     hedge: bool = False
+    # SLO class ("latency" | "batch" | "best_effort"); None derives the
+    # pre-SLO default worker-side (request_queue.resolve_slo_class)
+    slo: Optional[str] = None
     # End-to-end trace correlation: the router mints one id per client
     # request and re-sends it on every failover resubmit, so spans from
     # different workers (and different req_ids) stitch into one story.
@@ -247,7 +250,8 @@ class InProcWorker:
         fut = self._sched.submit(msg.workload, msg.payload,
                                  deadline=msg.deadline_s,
                                  priority=msg.priority, hedge=msg.hedge,
-                                 trace_id=msg.trace_id)
+                                 trace_id=msg.trace_id,
+                                 slo_class=msg.slo)
 
         def deliver(f):
             if self._killed:
@@ -495,7 +499,8 @@ def worker_main(argv=None) -> int:
         fut = sched.submit(msg.workload, msg.payload,
                            deadline=msg.deadline_s,
                            priority=msg.priority, hedge=msg.hedge,
-                           trace_id=msg.trace_id)
+                           trace_id=msg.trace_id,
+                           slo_class=msg.slo)
 
         def deliver(f):
             now = time.monotonic()

@@ -83,6 +83,12 @@ class RequestSpec:
     merge: Optional[Callable[[List["RequestSpec"]],
                              Optional["MergedBatch"]]] = None
     stepper: Optional[object] = None
+    # contention pricing class: "jax" ops are internally multithreaded
+    # (XLA grabs every core, so two lanes contend); "host" ops
+    # (GIL-releasing single-core numpy, e.g. sort) overlap a jax lane
+    # near-perfectly.  The scheduler prices shared/contended spans
+    # with the factor probed for THIS class instead of one global one.
+    lane_class: str = "jax"
 
 
 @dataclass(frozen=True)
@@ -378,7 +384,7 @@ def _sort_merge(specs: List[RequestSpec]) -> Optional[MergedBatch]:
         run_one=run_one, run_share=run_share,
         combine=lambda outs: np.concatenate(outs, axis=0),
         unit_cost=CostTerms(flops=2.0 * n * lg, bytes=8.0 * n * lg),
-        bucket=base.bucket)
+        bucket=base.bucket, lane_class="host")
     return MergedBatch(spec, lambda value, i: value[i])
 
 
@@ -411,7 +417,7 @@ def _sort_spec(payload: Optional[dict]) -> RequestSpec:
         unit_cost=CostTerms(flops=2.0 * seg * lg, bytes=8.0 * seg * lg),
         comm_cost=0.0,
         bucket=f"N{pow2_bucket(n)}",
-        arrays=(x,), merge=_sort_merge)
+        arrays=(x,), merge=_sort_merge, lane_class="host")
 
 
 # ---------------------------------------------------------------------------
